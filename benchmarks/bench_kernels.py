@@ -1,0 +1,67 @@
+"""Kernel-level benchmarks: SAC bit-plane matmul + kneaded integer GEMM.
+
+Wall-times here are interpret-mode (CPU container) — meaningful only as
+correctness-path cost; the TPU-relevant derived metrics are the HBM byte
+ratios and the plane/tile skip fractions (what the roofline consumes).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core import knead, quantize
+from repro.kernels.kneaded_gemm.ops import kneaded_gemm
+from repro.kernels.kneaded_gemm.ref import pack_int4
+from repro.kernels.sac_matmul.ops import sac_matmul_pallas
+from repro.kernels.sac_matmul.ref import sac_matmul_ref
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+    m, k, n = 8, 1024, 512
+    w = jax.random.normal(key, (k, n)) * 0.02
+    a = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+
+    for bits in (4, 8, 16):
+        kw = knead(w, bits=bits, ks=256, n_block=128)
+        us, out = timed(lambda: sac_matmul_pallas(a, kw, bm=8), repeats=1)
+        ref = sac_matmul_ref(a, kw)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        occ = np.asarray(kw.occupancy)
+        skip = 1.0 - occ.mean()
+        ratio = kw.packed_bytes() / kw.dense_bf16_bytes()
+        rows.append((
+            f"kernel/sac_matmul_b{bits}", us,
+            f"bytes_vs_bf16={ratio:.3f} plane_tile_skip={100*skip:.1f}% "
+            f"max_err={err:.1e}"))
+
+    qt8 = quantize(w, bits=8)
+    us, out8 = timed(lambda: kneaded_gemm(a, qt8.q, qt8.scale.reshape(1, -1)),
+                     repeats=1)
+    rows.append(("kernel/kneaded_gemm_int8", us,
+                 f"weight_bytes_vs_bf16=0.500 max_err="
+                 f"{float(jnp.max(jnp.abs(out8 - a @ (qt8.q * qt8.scale)))):.1e}"))
+
+    qt4 = quantize(w, bits=4)
+    packed = pack_int4(qt4.q)
+    us, out4 = timed(lambda: kneaded_gemm(a, packed, qt4.scale.reshape(1, -1),
+                                          packed4=True), repeats=1)
+    rows.append(("kernel/kneaded_gemm_int4", us,
+                 f"weight_bytes_vs_bf16=0.250 max_err="
+                 f"{float(jnp.max(jnp.abs(out4 - a @ (qt4.q * qt4.scale)))):.1e}"))
+
+    # dense bf16 reference timing (XLA, not interpret — not comparable, but
+    # shows the oracle cost scale)
+    us, _ = timed(lambda: a.astype(jnp.bfloat16) @ w.astype(jnp.bfloat16))
+    rows.append(("kernel/dense_bf16_xla_ref", us, "baseline_matmul"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -1,0 +1,234 @@
+"""Paper-reproduction benchmarks: Table 1, Fig 2, Fig 8, Fig 9, Fig 10,
+Fig 11, Table 2 — one function per artifact, all driven by real quantized
+weights/activations of the paper's own CNN family (+ one modern LM for
+context) through the cycle-accurate DaDN/PRA/Tetris cost model.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, cnn_layer_data, timed
+from repro.core import cost_model, quantize, stats as wstats
+from repro.core.kneading import kneading_ratio
+
+CNNS = ("alexnet", "vgg16", "nin")
+
+# Paper reference values for side-by-side reporting
+PAPER_TABLE1 = {"alexnet": (0.093, 70.52), "vgg16": (0.156, 70.52),
+                "nin": (0.193, 67.02)}
+PAPER_FIG8 = {"tetris_fp16": 1.30, "tetris_int8": 1.50, "pra": 1.15}
+
+
+def _layer_cost(w, act, bits, ks, mode):
+    # per-tensor fixed point: the paper's hardware number format
+    qw = quantize(w, bits=bits, axis=None)
+    qa = quantize(jnp.abs(act[: min(4096, act.shape[0])]), bits=16, axis=None)
+    return cost_model.model_layer(qw.q, qa.q, bits=bits, ks=ks, mode=mode)
+
+
+def _model_speedups(name: str, ks: int = 16) -> Dict[str, float]:
+    """MAC-weighted aggregate speedups for one CNN, fp16 + int8 modes."""
+    weights, acts = cnn_layer_data(name)
+    tot = {"dadn": 0.0, "pra": 0.0, "tetris16": 0.0,
+           "dadn8": 0.0, "tetris8": 0.0}
+    for lname, w in weights.items():
+        act = acts[lname]
+        c16 = _layer_cost(w, act, 16, ks, "fp16")
+        c8 = _layer_cost(w, act, 8, ks, "int8")
+        tot["dadn"] += c16.dadn
+        tot["pra"] += c16.pra
+        tot["tetris16"] += c16.tetris
+        tot["dadn8"] += c8.dadn
+        tot["tetris8"] += c8.tetris
+    return {
+        "pra": tot["dadn"] / tot["pra"],
+        "tetris_fp16": tot["dadn"] / tot["tetris16"],
+        "tetris_int8": tot["dadn8"] / tot["tetris8"],
+    }
+
+
+def bench_table1() -> List[Row]:
+    """Table 1: zero-value % and zero-bit % of fixed-16 quantized weights."""
+    rows: List[Row] = []
+    aggregate = {}
+    for name in CNNS:
+        t0 = time.perf_counter()
+        weights, _ = cnn_layer_data(name)
+        per_layer = {ln: wstats.weight_bit_stats(w, bits=16)
+                     for ln, w in weights.items()}
+        agg = wstats.aggregate_stats(per_layer)
+        us = (time.perf_counter() - t0) * 1e6
+        ref = PAPER_TABLE1.get(name, ("-", "-"))
+        rows.append((
+            f"table1/{name}", us,
+            f"zero_val%={100*agg.zero_value_frac:.3f} "
+            f"zero_bit%={100*agg.zero_bit_frac:.2f} "
+            f"(paper: {ref[0]}/{ref[1]})"))
+        aggregate[name] = agg
+    gm = np.exp(np.mean([np.log(100 * a.zero_bit_frac)
+                         for a in aggregate.values()]))
+    rows.append(("table1/geomean_zero_bit%", 0.0,
+                 f"{gm:.2f} (paper: 68.88; gap = our 25-step CNNs are "
+                 f"near-Gaussian, fully-trained ImageNet weights are "
+                 f"heavy-tailed)"))
+    # validation: a heavy-tailed (Student-t df=3) weight field — the
+    # distribution shape of fully-trained conv layers — recovers the
+    # paper's zero-bit regime under the same per-tensor fixed point.
+    key = jax.random.PRNGKey(0)
+    t3 = jax.random.t(key, 3.0, (512, 512))
+    s_t3 = wstats.weight_bit_stats(t3, bits=16)
+    rows.append(("table1/heavytail_t3_synthetic", 0.0,
+                 f"zero_bit%={100*s_t3.zero_bit_frac:.2f} "
+                 f"(paper trained-model regime: ~69)"))
+    return rows
+
+
+def bench_fig2() -> List[Row]:
+    """Fig 2: essential-bit density per bit position (fixed-16 weights)."""
+    rows: List[Row] = []
+    dens = []
+    for name in CNNS:
+        weights, _ = cnn_layer_data(name)
+        per_layer = {ln: wstats.weight_bit_stats(w, bits=16)
+                     for ln, w in weights.items()}
+        agg = wstats.aggregate_stats(per_layer)
+        dens.append(agg.per_bit_density)
+        head = " ".join(f"{d:.2f}" for d in agg.per_bit_density)
+        rows.append((f"fig2/{name}", 0.0, f"density[b0..b14]=[{head}]"))
+    mean = np.mean(dens, axis=0)
+    rows.append(("fig2/mid_bit_mean_density", 0.0,
+                 f"{np.mean(mean[2:10]):.3f} (paper: 0.50-0.60)"))
+    rows.append(("fig2/top_bit_density", 0.0,
+                 f"{mean[-1]:.4f} (paper cliff: <0.01 at sparse bits)"))
+    return rows
+
+
+def bench_fig8() -> List[Row]:
+    """Fig 8: inference speedup vs DaDN (cycle model on real weights)."""
+    rows: List[Row] = []
+    alls: Dict[str, List[float]] = {"pra": [], "tetris_fp16": [],
+                                    "tetris_int8": []}
+    for name in CNNS:
+        t0 = time.perf_counter()
+        sp = _model_speedups(name, ks=16)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig8/{name}", us,
+                     f"pra={sp['pra']:.2f}x tetris_fp16={sp['tetris_fp16']:.2f}x "
+                     f"tetris_int8={sp['tetris_int8']:.2f}x"))
+        for k in alls:
+            alls[k].append(sp[k])
+    for k, v in alls.items():
+        gm = float(np.exp(np.mean(np.log(v))))
+        rows.append((f"fig8/geomean_{k}", 0.0,
+                     f"{gm:.3f}x (paper: {PAPER_FIG8[k]}x)"))
+    return rows
+
+
+def bench_fig9() -> List[Row]:
+    """Fig 9: per-Conv-layer speedup of VGG-16, two KS configs."""
+    rows: List[Row] = []
+    weights, acts = cnn_layer_data("vgg16")
+    for ks in (16, 32):
+        parts = []
+        for lname, w in weights.items():
+            if not lname.startswith("conv"):
+                continue
+            c = _layer_cost(w, acts[lname], 16, ks, "fp16")
+            parts.append(f"{lname}={c.dadn/c.tetris:.2f}")
+        rows.append((f"fig9/vgg16_ks{ks}", 0.0, " ".join(parts)))
+    return rows
+
+
+def bench_fig10() -> List[Row]:
+    """Fig 10: energy-delay product normalized to DaDN."""
+    rows: List[Row] = []
+    effs = {"pra": [], "tetris_fp16": [], "tetris_int8": []}
+    for name in CNNS:
+        sp = _model_speedups(name, ks=16)
+        # EDP ∝ P * T^2; improvement = EDP_dadn / EDP_x = speedup^2 / P_ratio
+        e = {
+            "pra": sp["pra"] ** 2 / cost_model.POWER_RATIO["pra"],
+            "tetris_fp16": sp["tetris_fp16"] ** 2
+            / cost_model.POWER_RATIO["tetris"],
+            "tetris_int8": sp["tetris_int8"] ** 2
+            / cost_model.POWER_RATIO["tetris"],
+        }
+        rows.append((f"fig10/{name}", 0.0,
+                     f"EDP_impr: pra={e['pra']:.2f}x "
+                     f"tetris_fp16={e['tetris_fp16']:.2f}x "
+                     f"tetris_int8={e['tetris_int8']:.2f}x"))
+        for k in effs:
+            effs[k].append(e[k])
+    gm = {k: float(np.exp(np.mean(np.log(v)))) for k, v in effs.items()}
+    rows.append(("fig10/geomean", 0.0,
+                 f"tetris_fp16={gm['tetris_fp16']:.2f}x (paper 1.24x) "
+                 f"tetris_int8={gm['tetris_int8']:.2f}x (paper 1.46x) "
+                 f"pra={gm['pra']:.2f}x (paper 0.35x=1/2.87)"))
+    return rows
+
+
+def bench_fig11() -> List[Row]:
+    """Fig 11: T_ks / T_base for KS in {10,16,24,32}, fp16 + int8."""
+    rows: List[Row] = []
+    for name in CNNS:
+        weights, _ = cnn_layer_data(name)
+        big = max(weights.items(), key=lambda kv: kv[1].size)[1]
+        for bits, mode in ((16, "fp16"), (8, "int8")):
+            qw = quantize(big, bits=bits, axis=None)
+            vals = []
+            for ks in (10, 16, 24, 32):
+                k = (qw.q.shape[0] // ks) * ks
+                r = float(kneading_ratio(qw.q[:k], bits, ks))
+                vals.append(f"ks{ks}={100*r:.1f}%")
+            rows.append((f"fig11/{name}_{mode}", 0.0, " ".join(vals)))
+    rows.append(("fig11/paper_ref", 0.0,
+                 "paper alexnet fp16: ks10=75.1% ks32=64.2%; int8 49.4-48.8% "
+                 "(int8 halves cycles at equal ratio)"))
+    return rows
+
+
+def bench_table2() -> List[Row]:
+    """Table 2: area model.  We cannot synthesize (no EDA tools); the model
+    reproduces the paper's component breakdown and scales splitter area with
+    KS decode width (log2 KS) and segment adders with bit width."""
+    # paper per-PE areas (mm^2, TSMC 65nm)
+    base = {"io_rams": 3.828, "throttle": 0.957, "splitter": 0.544,
+            "act_fn": 0.143, "seg_adders": 0.129, "adder_tree": 0.008}
+    dadn_total = 79.36
+
+    def pe_area(ks: int, bits: int) -> float:
+        s = dict(base)
+        s["splitter"] = base["splitter"] * (np.log2(ks) / 4.0)   # p-width
+        s["seg_adders"] = base["seg_adders"] * (bits / 16.0)
+        return sum(s.values())
+
+    rows: List[Row] = []
+    a16 = 16 * pe_area(16, 16)
+    rows.append(("table2/tetris_fp16_total_mm2", 0.0,
+                 f"{a16:.2f} (paper: 89.76; overhead vs DaDN "
+                 f"{a16/dadn_total:.3f}x, paper 1.131x)"))
+    for ks in (8, 16, 32):
+        rows.append((f"table2/area_ks{ks}", 0.0,
+                     f"{16*pe_area(ks,16):.2f} mm2"))
+    frac = {k: v / sum(base.values()) for k, v in base.items()}
+    rows.append(("table2/breakdown", 0.0,
+                 " ".join(f"{k}={100*v:.1f}%" for k, v in frac.items())))
+    return rows
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for fn in (bench_table1, bench_fig2, bench_fig8, bench_fig9,
+               bench_fig10, bench_fig11, bench_table2):
+        rows.extend(fn())
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -1,0 +1,65 @@
+"""Shared benchmark utilities: trained CNN weights (cached), timing, CSV."""
+from __future__ import annotations
+
+import pathlib
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+ART.mkdir(exist_ok=True)
+
+Row = Tuple[str, float, str]     # (name, us_per_call, derived)
+
+
+def timed(fn: Callable, *args, repeats: int = 3) -> Tuple[float, object]:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return us, out
+
+
+def cnn_weights(name: str, trained: bool = True) -> Dict:
+    """Lightly-trained CNN weights, cached to disk (paper measures trained
+    Caffe models — training sharpens the weight distribution toward zero)."""
+    from repro.models import cnn
+    cache = ART / f"cnn_{name}{'_trained' if trained else ''}.npz"
+    cfg = cnn.CNN_ZOO[name]
+    if cache.exists():
+        data = np.load(cache)
+        params = cnn.init(jax.random.PRNGKey(0), cfg)
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        flat = [jnp.asarray(data[f"leaf_{i}"]) for i in range(len(flat))]
+        return jax.tree_util.tree_unflatten(treedef, flat)
+    if trained:
+        params = cnn.train_briefly(jax.random.PRNGKey(0), cfg, steps=25,
+                                   batch=16)
+    else:
+        params = cnn.init(jax.random.PRNGKey(0), cfg)
+    flat, _ = jax.tree_util.tree_flatten(params)
+    np.savez(cache, **{f"leaf_{i}": np.asarray(x)
+                       for i, x in enumerate(flat)})
+    return params
+
+
+def cnn_layer_data(name: str):
+    """(weight matrices, activation samples) per layer for the cost model."""
+    from repro.models import cnn
+    cfg = cnn.CNN_ZOO[name]
+    params = cnn_weights(name)
+    x = jax.random.normal(jax.random.PRNGKey(3),
+                          (4, cfg.image_size, cfg.image_size, 3))
+    _, acts = cnn.apply(params, x, cfg, collect_activations=True)
+    return cnn.weight_matrices(params), acts
+
+
+def print_rows(rows: List[Row]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,139 @@
+"""Roofline aggregation: dry-run artifacts -> §Roofline table.
+
+For every (arch x shape x mesh [x quant/attn variant]) JSON produced by
+``repro.launch.dryrun``, compute:
+
+  compute_s    = HLO dot FLOPs / (chips * 197 TF/s)     [parsed, trip-aware]
+  memory_s     = per-device working set / 819 GB/s      [memory_analysis]
+  collective_s = collective bytes / (chips * 50 GB/s)   [parsed, trip-aware]
+
+  MODEL_FLOPS  = 6*N*D (train) | 2*N_active*tokens (prefill/decode)
+  useful_ratio = MODEL_FLOPS / HLO FLOPs   (remat/causal/dispatch waste)
+  rf           = model-FLOPs time / max(term)  — the roofline fraction
+                 (upper bound on MFU reachable with this compiled program)
+
+Writes benchmarks/artifacts/roofline.md and prints a compact table.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+DRY = ART / "dryrun"
+
+
+def model_flops(rec: Dict) -> float:
+    n_active = rec.get("active_params") or rec.get("params") or 0
+    shape = rec["shape"]
+    kind = rec.get("kind", "train")
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1,
+           "long_500k": 1}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+             "long_500k": 1}[shape]
+    tokens = seq * batch
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return None
+    chips = rec["chips"]
+    hlo = rec["hlo_per_device"]
+    terms = rec["roofline_terms_s"]
+    mf = model_flops(rec)
+    hlo_global_flops = hlo["dot_flops"] * chips
+    model_t = mf / (chips * PEAK_FLOPS_BF16)
+    tmax = max(terms.values())
+    return {
+        "cell": f'{rec["arch"]}/{rec["shape"]}',
+        "mesh": rec["mesh"],
+        "variant": f'{rec.get("quant","bf16")}'
+                   + (f'+{rec["attn_impl"]}' if rec.get("attn_impl") else ""),
+        "compute_s": terms["compute_s"],
+        "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "dominant": rec["dominant_term"].replace("_s", ""),
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_global_flops if hlo_global_flops else 0.0,
+        "rf": model_t / tmax if tmax else 0.0,
+        "mem_gib": rec.get("hbm_bytes_per_device", 0) / 2**30,
+        "arg_gib": rec["memory"]["argument_bytes"] / 2**30,
+        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "lever": _next_lever(rec),
+    }
+
+
+def _next_lever(rec) -> str:
+    """One sentence: what would move the dominant term down (§Roofline)."""
+    dom = rec["dominant_term"]
+    kind = rec.get("kind", "train")
+    par = rec.get("parallelism", "tp")
+    quant = rec.get("quant", "bf16")
+    if dom == "compute_s":
+        return ("near compute roofline; next: raise useful ratio "
+                "(attention/vocab share)")
+    if dom == "memory_s":
+        return ("kneaded int4 weights + int8 KV cache halve the byte term"
+                if quant == "bf16" else "int8 KV cache next")
+    if kind in ("decode", "prefill"):
+        return ("weight gathers at dequantized width — explicit shard_map "
+                "intN-gather matmul (future work); kneaded intN already "
+                "cuts the gathered bytes" if quant != "bf16" else
+                "kneaded int8/int4 weights cut the dominant weight-gather "
+                "bytes 2-4x (§Perf C2)")
+    if par == "dp":
+        return ("grad reduce-scatter in bf16; ring context-parallel over "
+                "pod to reclaim the 2x duplication")
+    if rec.get("arch", "").find("moe") >= 0 or "arctic" in rec.get("arch", ""):
+        return ("expert regathers are the floor at this scale; EP all-to-all "
+                "token routing or more chips")
+    return ("TP activation ARs: SP converts to RS/AG (memory win), fewer "
+            "ARs/layer via qkv fusion; or dp profile if states fit")
+
+
+def load_all() -> List[Dict]:
+    out = []
+    for f in sorted(DRY.glob("*.json")):
+        rec = json.loads(f.read_text())
+        a = analyze(rec)
+        if a:
+            out.append(a)
+    return out
+
+
+def render(rows: List[Dict]) -> str:
+    hdr = ("| cell | mesh | variant | compute_s | memory_s | collective_s | "
+           "dominant | useful=6ND/HLO | RF | arg GiB | temp GiB | "
+           "next lever |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f'| {r["cell"]} | {r["mesh"]} | {r["variant"]} '
+                 f'| {r["compute_s"]:.3e} | {r["memory_s"]:.3e} '
+                 f'| {r["collective_s"]:.3e} | **{r["dominant"]}** '
+                 f'| {r["useful_ratio"]:.3f} | {r["rf"]:.3f} '
+                 f'| {r["arg_gib"]:.1f} | {r["temp_gib"]:.1f} '
+                 f'| {r["lever"]} |\n')
+    return hdr + body
+
+
+def run():
+    rows = load_all()
+    md = render(rows)
+    (ART / "roofline.md").write_text(md)
+    out = []
+    for r in rows:
+        out.append((f'roofline/{r["cell"]}@{r["mesh"]}/{r["variant"]}', 0.0,
+                    f'dom={r["dominant"]} RF={r["rf"]:.3f} '
+                    f'useful={r["useful_ratio"]:.2f}'))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, d in run():
+        print(f"{name},{us:.1f},{d}")

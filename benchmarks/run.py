@@ -1,0 +1,34 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure (cycle-accurate cost model on real
+quantized weights), the Pallas kernel metrics, and the roofline aggregation
+over whatever dry-run artifacts exist.  Output format: name,us_per_call,
+derived (CSV).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    failures = 0
+    from benchmarks import bench_kernels, bench_paper_tables, roofline
+    sections = [("paper_tables", bench_paper_tables.run),
+                ("kernels", bench_kernels.run),
+                ("roofline", roofline.run)]
+    print("name,us_per_call,derived")
+    for name, fn in sections:
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Kneading design-space exploration on the paper's own CNNs.
+
+Reproduces the paper's analysis pipeline interactively: trains the three
+CNNs briefly, then sweeps kneading stride and bit width and prints the
+cycle-model speedups + the area trade-off — the Fig 11 / Table 2 story.
+
+Run:  PYTHONPATH=src python examples/kneading_analysis.py
+"""
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.common import cnn_layer_data
+from repro.core import cost_model, quantize
+from repro.core.kneading import kneading_ratio
+
+
+def main():
+    for name in ("alexnet", "vgg16", "nin"):
+        weights, acts = cnn_layer_data(name)
+        big_name, big = max(weights.items(), key=lambda kv: kv[1].size)
+        print(f"\n=== {name} (largest layer: {big_name} {tuple(big.shape)})")
+        print(f"{'KS':>4} {'fp16 T_ks/T0':>13} {'int8 T_ks/T0':>13} "
+              f"{'splitter p bits':>16}")
+        for ks in (8, 10, 16, 24, 32, 64):
+            q16 = quantize(big, bits=16, axis=None).q
+            q8 = quantize(big, bits=8, axis=None).q
+            k16 = (q16.shape[0] // ks) * ks
+            r16 = float(kneading_ratio(q16[:k16], 16, ks))
+            r8 = float(kneading_ratio(q8[:k16], 8, ks))
+            print(f"{ks:4d} {100*r16:12.1f}% {100*r8:12.1f}% "
+                  f"{int(np.ceil(np.log2(ks))):16d}")
+        # end-to-end modeled speedup at the paper's operating point
+        tot_d = tot_t = 0.0
+        for lname, w in weights.items():
+            qw = quantize(w, bits=16, axis=None)
+            qa = quantize(jnp.abs(acts[lname][:2048]), bits=16, axis=None)
+            c = cost_model.model_layer(qw.q, qa.q, bits=16, ks=16)
+            tot_d += c.dadn
+            tot_t += c.tetris
+        print(f"  KS=16 end-to-end Tetris speedup: {tot_d/tot_t:.2f}x "
+              f"(paper Fig 8: ~1.3x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""arctic-480b [moe] — hf:Snowflake/snowflake-arctic-base.
+
+35 layers, d_model=7168, 56 heads (GQA kv=8), d_ff=4864, vocab=32000,
+MoE 128 experts top-2 **plus a dense residual FFN in parallel** (Arctic's
+dense-MoE hybrid design).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    num_experts=128,
+    top_k=2,
+    moe_dff=4864,
+    dense_residual=True,
+    activation="swiglu",
+    sequence_parallel=True,
+    sp_matmul_gather=False,
+    flash_replicate_pin=False,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=512, num_experts=8, top_k=2, moe_dff=64, attn_chunk=64,
+)

@@ -1,0 +1,32 @@
+"""llama-3.2-vision-90b [vlm] — hf:meta-llama/Llama-3.2-11B-Vision (90B cfg).
+
+100 layers, d_model=8192, 64 heads (GQA kv=8), d_ff=28672, vocab=128256.
+One gated cross-attention layer per 5 layers (20 cross-attn applications).
+The vision encoder is a STUB per the assignment: ``input_specs`` feeds
+precomputed patch embeddings [B, num_image_tokens, d_model].
+num_image_tokens=2048 (≈4 image tiles; rounded to the MXU tile — the
+frontend is a stub so only the shape matters, recorded in DESIGN.md §6).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    num_layers=100,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    cross_attn_every=5,
+    num_image_tokens=2048,
+    rope_theta=500_000.0,
+    sequence_parallel=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=512, cross_attn_every=2, num_image_tokens=16, attn_chunk=64,
+)

@@ -1,0 +1,27 @@
+"""nemotron-4-340b [dense] — arXiv:2402.16819.
+
+96 layers, d_model=18432, 96 heads (GQA kv=8), d_ff=73728, vocab=256000,
+squared-ReLU MLP (non-gated), LayerNorm, RoPE.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    num_layers=96,
+    d_model=18432,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=73728,
+    vocab_size=256000,
+    activation="relu2",
+    norm="layernorm",
+    sequence_parallel=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=256,
+    vocab_size=512, attn_chunk=64,
+)

@@ -1,0 +1,25 @@
+"""phi3-medium-14b [dense] — arXiv:2404.14219.
+
+40 layers, d_model=5120, 40 heads (GQA kv=10), d_ff=17920, vocab=100352,
+RoPE + SwiGLU + GQA.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=10,
+    d_ff=17920,
+    vocab_size=100352,
+    parallelism="dp",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=512, attn_chunk=64,
+)

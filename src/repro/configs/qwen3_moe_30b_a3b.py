@@ -1,0 +1,33 @@
+"""qwen3-moe-30b-a3b [moe] — hf:Qwen/Qwen3-30B-A3B.
+
+48 layers, d_model=2048, 32 heads (GQA kv=4), per-expert d_ff=768,
+vocab=151936, MoE 128 experts top-8, qk-norm (Qwen3 signature).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,            # Qwen3 uses decoupled head_dim=128
+    d_ff=0,                  # no dense FFN — pure MoE layers
+    moe_dff=768,
+    vocab_size=151936,
+    num_experts=128,
+    top_k=8,
+    qk_norm=True,
+    sequence_parallel=True,
+    sp_matmul_gather=False,
+    activation="swiglu",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    head_dim=16, moe_dff=64, vocab_size=512, num_experts=8, top_k=2,
+    attn_chunk=64,
+)

@@ -1,0 +1,56 @@
+"""Architecture registry: ``--arch <id>`` resolution for all launchers.
+
+Maps arch ids to (CONFIG, SMOKE) plus the per-arch shape applicability rules
+from DESIGN.md §4 (long_500k skipped for pure full-attention archs).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.configs.base import InputShape, LM_SHAPES, ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "whisper-medium": "repro.configs.whisper_medium",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "xlstm-1.3b": "repro.configs.xlstm_1p3b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "llama-3.2-vision-90b": "repro.configs.llama_3p2_vision_90b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[InputShape]:
+    """The shape cells this arch runs (DESIGN.md §4).
+
+    long_500k requires sub-quadratic context handling -> only SSM/hybrid
+    families run it; pure full-attention archs record the cell as skipped.
+    """
+    out = []
+    for s in LM_SHAPES:
+        if s.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+            continue
+        out.append(s)
+    return out
+
+
+def all_cells(smoke: bool = False) -> List[Tuple[str, InputShape]]:
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, smoke=smoke)
+        for s in applicable_shapes(cfg):
+            cells.append((arch, s))
+    return cells

@@ -1,0 +1,27 @@
+"""smollm-360m [dense] — hf:HuggingFaceTB/SmolLM-360M.
+
+32 layers, d_model=960, 15 heads (GQA kv=5), d_ff=2560, vocab=49152,
+tied embeddings (llama-arch small).  This is the end-to-end training
+example arch (examples/train_smollm.py).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    num_layers=32,
+    d_model=960,
+    num_heads=15,
+    num_kv_heads=5,
+    d_ff=2560,
+    vocab_size=49152,
+    tie_embeddings=True,
+    parallelism="dp",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=48, num_heads=3, num_kv_heads=1, d_ff=128,
+    vocab_size=512, attn_chunk=64,
+)

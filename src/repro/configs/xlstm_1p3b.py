@@ -1,0 +1,30 @@
+"""xlstm-1.3b [ssm] — arXiv:2405.04517.
+
+48 blocks, d_model=2048, 4 heads, vocab=50304, d_ff=0 (xLSTM blocks carry
+their own up/down projections, expand factor 2).  Block ratio 7 mLSTM : 1
+sLSTM (the paper's xLSTM[7:1]) -> groups of 8.  Runs long_500k: state is
+O(1) in context (matrix memories), no KV cache growth.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    ssm_expand=2,
+    slstm_every=8,
+    positional="none",
+    parallelism="dp",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=4, d_model=64, num_heads=2, num_kv_heads=2,
+    vocab_size=512, slstm_every=2, attn_chunk=64,
+)

@@ -1,0 +1,34 @@
+"""zamba2-2.7b [hybrid] — arXiv:2411.15242.
+
+54 Mamba2 blocks (d_model=2560, ssm_state=64) with a *shared* attention +
+MLP block (32 heads, kv=32, d_ff=10240) applied every 6 blocks (9
+applications, one weight set — Zamba2's parameter-sharing design).
+Runs long_500k: the trunk is SSM-dominated; decode attention over the shared
+block's KV is linear in context.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    attn_every=6,
+    activation="gelu",
+    parallelism="dp",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=4, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+    vocab_size=512, ssm_state=16, ssm_head_dim=16, attn_every=2,
+    attn_chunk=64,
+)

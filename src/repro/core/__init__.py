@@ -1,0 +1,27 @@
+"""Tetris core — weight kneading + SAC, the paper's contribution in JAX.
+
+Public API:
+  quantize / dequantize / fake_quantize      (fixed-point substrate)
+  knead / unknead / KneadedWeight            (the kneaded weight format)
+  kneaded_cycles / kneading_ratio            (paper Fig 3 cycle semantics)
+  sac_matmul / TetrisLinear                  (SAC computing pattern)
+  weight_bit_stats                           (Table 1 / Fig 2 statistics)
+  cost_model                                 (DaDN / PRA / Tetris cycle model)
+"""
+from repro.core.quantization import (
+    QuantizedTensor, quantize, dequantize, fake_quantize, storage_dtype,
+)
+from repro.core.kneading import (
+    KneadedWeight, knead, unknead, kneaded_cycles, kneading_ratio,
+)
+from repro.core.sac import sac_matmul, sac_matmul_planes, sac_matmul_int, TetrisLinear
+from repro.core.stats import WeightBitStats, weight_bit_stats, aggregate_stats
+from repro.core import bitplanes, cost_model
+
+__all__ = [
+    "QuantizedTensor", "quantize", "dequantize", "fake_quantize", "storage_dtype",
+    "KneadedWeight", "knead", "unknead", "kneaded_cycles", "kneading_ratio",
+    "sac_matmul", "sac_matmul_planes", "sac_matmul_int", "TetrisLinear",
+    "WeightBitStats", "weight_bit_stats", "aggregate_stats",
+    "bitplanes", "cost_model",
+]

@@ -1,0 +1,130 @@
+"""Bit-plane decomposition and packing — the data layout under SAC.
+
+The paper interprets fixed-point weights bit-by-bit (Fig 3) and routes
+activations per essential bit (Fig 4/6).  The TPU-native equivalent is a
+*sign-magnitude bit-plane decomposition*:
+
+    q = sign(q) * |q|,   |q| = sum_b 2^b * P_b,   P_b in {0,1}
+
+so that
+
+    A @ (q * scale) = scale * sum_b 2^b * (A @ S_b),   S_b = sign(q) * P_b
+
+Each ``S_b`` is a {-1, 0, 1} matrix — a *bit plane*.  The per-plane partial
+products ``A @ S_b`` are the paper's *segment registers*; the single final
+``sum_b 2^b`` is the *rear adder tree*.  Plane density directly measures the
+paper's "essential bits": an all-zero plane tile is pure slack and is skipped
+by the kernel (the kneading analogue).
+
+Sign-magnitude (rather than two's complement) is chosen deliberately: for
+bell-shaped weight distributions the high-magnitude planes are nearly empty,
+while two's complement sign-extension would fill them with 1s for every
+negative weight — destroying the very slack the paper harvests.
+
+Packing: planes are bit-packed 32-per-word (uint32) along the *reduction*
+axis K, so a B-bit kneaded weight matrix occupies ``B/16`` of its bf16 bytes
+in HBM — the memory-roofline payoff for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "to_signed_planes",
+    "from_signed_planes",
+    "magnitude_planes",
+    "pack_bits",
+    "unpack_bits",
+    "plane_tile_occupancy",
+    "popcount",
+]
+
+WORD = 32  # packing word width (uint32)
+
+
+def popcount(x: jax.Array) -> jax.Array:
+    """Number of set bits, elementwise (int32 result)."""
+    return jax.lax.population_count(x.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def magnitude_planes(q: jax.Array, bits: int) -> jax.Array:
+    """Unsigned magnitude planes: P[b] = bit b of |q|.
+
+    Args:
+      q: integer codes, any signed int dtype; |q| must fit in ``bits - 1`` bits.
+    Returns:
+      uint8 array of shape ``(bits - 1,) + q.shape`` with values in {0, 1}.
+    """
+    mag = jnp.abs(q.astype(jnp.int32))
+    shifts = jnp.arange(bits - 1, dtype=jnp.int32).reshape(
+        (bits - 1,) + (1,) * q.ndim
+    )
+    return ((mag[None] >> shifts) & 1).astype(jnp.uint8)
+
+
+def to_signed_planes(q: jax.Array, bits: int) -> jax.Array:
+    """Signed planes S[b] = sign(q) * bit b of |q|, values in {-1, 0, 1}.
+
+    Satisfies ``q == sum_b 2**b * S[b]`` exactly (int arithmetic).
+    """
+    planes = magnitude_planes(q, bits).astype(jnp.int8)
+    sign = jnp.sign(q.astype(jnp.int32)).astype(jnp.int8)
+    return planes * sign[None]
+
+
+def from_signed_planes(planes: jax.Array) -> jax.Array:
+    """Inverse of :func:`to_signed_planes` (int32 codes)."""
+    b = planes.shape[0]
+    weights = (2 ** jnp.arange(b, dtype=jnp.int32)).reshape((b,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=0)
+
+
+def pack_bits(bits01: jax.Array, axis: int = 0) -> jax.Array:
+    """Pack a {0,1} array into uint32 words along ``axis``.
+
+    ``axis`` length must be a multiple of 32 (pad upstream).  Bit ``i`` of the
+    word holds element ``word_index * 32 + i`` (little-endian within word).
+    """
+    axis = axis % bits01.ndim
+    n = bits01.shape[axis]
+    if n % WORD != 0:
+        raise ValueError(f"pack axis length {n} not a multiple of {WORD}")
+    x = jnp.moveaxis(bits01.astype(jnp.uint32), axis, -1)
+    x = x.reshape(x.shape[:-1] + (n // WORD, WORD))
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    packed = jnp.sum(x << shifts, axis=-1, dtype=jnp.uint32)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_bits(packed: jax.Array, axis: int = 0) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns uint8 {0,1} with axis length *32."""
+    axis = axis % packed.ndim
+    x = jnp.moveaxis(packed.astype(jnp.uint32), axis, -1)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits01 = ((x[..., None] >> shifts) & 1).astype(jnp.uint8)
+    bits01 = bits01.reshape(x.shape[:-1] + (x.shape[-1] * WORD,))
+    return jnp.moveaxis(bits01, -1, axis)
+
+
+def plane_tile_occupancy(
+    planes: jax.Array, k_block: int, n_block: int
+) -> jax.Array:
+    """Per (plane, K-tile, N-tile) occupancy: does any essential bit exist?
+
+    Args:
+      planes: {0,1} or {-1,0,1} planes of shape [B, K, N].
+      k_block, n_block: kernel tile extents (K % k_block == N % n_block == 0).
+    Returns:
+      int32 [B, K//k_block, N//n_block], 1 where the tile has >=1 essential bit.
+
+    This is the TPU analogue of the paper's pass-mark/throttle metadata: the
+    kernel consults it (scalar prefetch) and skips slack-only tiles.
+    """
+    b, k, n = planes.shape
+    if k % k_block or n % n_block:
+        raise ValueError(f"({k},{n}) not divisible by ({k_block},{n_block})")
+    t = jnp.abs(planes.astype(jnp.int32)).reshape(
+        b, k // k_block, k_block, n // n_block, n_block
+    )
+    return (jnp.sum(t, axis=(2, 4)) > 0).astype(jnp.int32)

@@ -1,0 +1,138 @@
+"""Cycle-accurate analytical cost model of DaDN / PRA / Tetris PEs.
+
+The paper evaluates Tetris with Vivado HLS cycle simulation against two
+baselines: DaDianNao (bit-parallel MAC, 1 pair/lane/cycle) and PRA
+(bit-pragmatic: bit-serial over *activation* essential bits).  This module is
+the analytical equivalent, driven by the measured bit statistics of real
+quantized weights/activations — it reproduces Figs 8, 9, 10, 11.
+
+Lane model (cycles per group of ``ks`` weight/activation pairs in one
+reduction lane):
+
+  DaDN   : ks                      (one MAC per cycle per lane)
+  PRA    : max_i popcount(A_i) over groups of 16 concurrent bit-lanes,
+           + PRA_STAGE_OVERHEAD    (the paper's multi-stage-shifter critique)
+  Tetris : max_b popcount_b(group) (kneaded cycles, Fig 3)
+
+int8 mode: the splitter halves double throughput for Tetris (paper §III.3);
+DaDN's int8 comparison point likewise processes two 8-bit pairs per cycle.
+All speedups are reported mode-to-mode (fp16 vs fp16, int8 vs int8), matching
+the paper's Fig 8 normalization.
+
+Energy: the paper measures average *power* ratios (PrimeTime): Tetris 1.08x
+DaDN, PRA 3.37x DaDN.  We inherit those constants (we cannot synthesize) and
+combine with modeled cycles:  EDP ∝ P * T^2  (Fig 10 uses EDP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplanes
+from repro.core.kneading import kneaded_cycles
+
+__all__ = [
+    "POWER_RATIO",
+    "CostBreakdown",
+    "dadn_lane_cycles",
+    "pra_lane_cycles",
+    "tetris_lane_cycles",
+    "model_layer",
+    "edp",
+]
+
+# Average-power ratios normalized to DaDN, from the paper's PrimeTime
+# measurements (§IV.B).  PRA pays 3.37x for 16x weight FIFOs.
+POWER_RATIO: Dict[str, float] = {"dadn": 1.0, "pra": 3.37, "tetris": 1.08}
+
+# PRA processes essential activation bits through a multi-stage shifter that
+# "cannot be accomplished within one cycle" (paper §IV.A).  Extra cycles per
+# 16-pair group; we inherit the paper's own PRA measurement by calibrating
+# this constant so PRA-fp16 lands at the reported ~1.15x over DaDN on the
+# CNN suite (benchmarks/bench_fig8) — the paper gives no finer-grained PRA
+# pipeline data to model from first principles.
+PRA_STAGE_OVERHEAD = 5
+PRA_GROUP = 16  # concurrent bit-lanes in the PRA design
+
+
+def _group(x: jax.Array, size: int) -> jax.Array:
+    """[K, ...] -> [ceil(K/size), size, ...], zero-padding the ragged tail
+    (zero codes contribute zero essential bits — exact for both models)."""
+    k = x.shape[0]
+    pad = (-k) % size
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x.reshape(((k + pad) // size, size) + x.shape[1:])
+
+
+def dadn_lane_cycles(n_pairs: int, mode: str = "fp16") -> float:
+    """Bit-parallel MAC baseline: one pair per cycle (two in int8 mode)."""
+    return n_pairs / (2.0 if mode == "int8" else 1.0)
+
+
+def pra_lane_cycles(act_codes: jax.Array, bits: int) -> jax.Array:
+    """PRA: per 16-pair group, max over lanes of activation popcount."""
+    mag = jnp.abs(act_codes.astype(jnp.int32)).reshape(-1)
+    pc = bitplanes.popcount(mag)
+    groups = _group(pc, PRA_GROUP)                      # [G, 16]
+    return jnp.sum(jnp.max(groups, axis=1) + PRA_STAGE_OVERHEAD)
+
+
+def tetris_lane_cycles(
+    w_codes: jax.Array, bits: int, ks: int, mode: str = "fp16"
+) -> jax.Array:
+    """Tetris: kneaded cycles per KS-group (Fig 3), halved in int8 mode."""
+    pad = (-w_codes.shape[0]) % ks
+    if pad:   # zero weights knead away for free — exact padding
+        w_codes = jnp.concatenate(
+            [w_codes, jnp.zeros((pad,) + w_codes.shape[1:], w_codes.dtype)])
+    cyc = kneaded_cycles(w_codes, bits, ks)             # [K/ks, ...]
+    total = jnp.sum(cyc)
+    return total / (2.0 if mode == "int8" else 1.0)
+
+
+@dataclasses.dataclass
+class CostBreakdown:
+    """Modeled cycles for one layer under each scheme."""
+
+    dadn: float
+    pra: float
+    tetris: float
+    mode: str
+    ks: int
+
+    def speedup(self) -> Dict[str, float]:
+        return {"pra": self.dadn / self.pra, "tetris": self.dadn / self.tetris}
+
+
+def model_layer(
+    w_codes: jax.Array,
+    act_codes: jax.Array,
+    bits: int,
+    ks: int = 16,
+    mode: str = "fp16",
+) -> CostBreakdown:
+    """Model one layer's lane cycles under DaDN / PRA / Tetris.
+
+    Args:
+      w_codes:   quantized weight codes [K, N] (K = reduction lane axis).
+      act_codes: quantized activation codes, any shape (sampled lane inputs).
+      bits:      16 for the paper's "fp16" fixed point, 8 for int8 mode.
+    """
+    kdim, n = w_codes.shape
+    # Total pairs = K per output lane; model a representative lane set (all N).
+    dadn = float(dadn_lane_cycles(kdim, mode)) * n
+    pra = float(pra_lane_cycles(act_codes, bits)) / max(act_codes.size // kdim, 1)
+    pra = pra * n  # same activation stream feeds every output lane
+    tet = float(tetris_lane_cycles(w_codes, bits, ks, mode))
+    return CostBreakdown(dadn=dadn, pra=float(pra), tetris=float(tet),
+                         mode=mode, ks=ks)
+
+
+def edp(cycles: float, scheme: str) -> float:
+    """Energy-delay product ∝ power * time^2, normalized units."""
+    return POWER_RATIO[scheme] * cycles * cycles

@@ -1,0 +1,157 @@
+"""Weight kneading — the paper's core contribution, in two forms.
+
+1. **Algorithmic model** (:func:`kneaded_cycles`): the exact combinatorial
+   semantics of Fig 3.  Within a group of ``ks`` (kneading stride) weights in
+   a reduction lane, essential bits bubble up per bit-column independently, so
+   the group compresses from ``ks`` weight-cycles to
+
+       cycles(group) = max_b  popcount_b(group)
+
+   (the tallest bit-column of the group).  Zero-value weights vanish for free
+   (all their columns are empty) — the paper's "two orthogonal dimensions" of
+   slack.  This drives the cycle-accurate cost model that reproduces the
+   paper's Figs 8/10/11.
+
+2. **TPU kneaded format** (:class:`KneadedWeight` / :func:`knead`): the
+   deployable artifact — sign-magnitude bit planes, bit-packed 32/word along
+   K, with per-(plane, tile) occupancy metadata so the Pallas kernel skips
+   slack tiles and the storage footprint is ``bits/16`` of bf16.  Kneading is
+   *exact*: ``unknead(knead(w)) == dequantize(quantize(w))`` bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplanes
+from repro.core.quantization import QuantizedTensor, quantize
+
+__all__ = [
+    "KneadedWeight",
+    "knead",
+    "unknead",
+    "kneaded_cycles",
+    "kneading_ratio",
+]
+
+
+# ---------------------------------------------------------------------------
+# 1. The paper-faithful kneading cycle model (Fig 3 semantics)
+# ---------------------------------------------------------------------------
+
+def kneaded_cycles(q: jax.Array, bits: int, ks: int) -> jax.Array:
+    """Cycles to process each KS-group of a weight lane after kneading.
+
+    Args:
+      q:    integer codes laid out [K, ...] with K the reduction (lane) axis.
+      bits: fixed-point width (B); magnitude planes are B-1.
+      ks:   kneading stride — group size along K.  K % ks must be 0.
+    Returns:
+      int32 [K // ks, ...]: per-group kneaded cycle count,
+      ``max_b popcount_b(group)``.  Un-kneaded cost is ``ks`` per group.
+    """
+    k = q.shape[0]
+    if k % ks:
+        raise ValueError(f"lane length {k} not divisible by ks={ks}")
+    planes = bitplanes.magnitude_planes(q, bits)          # [B-1, K, ...]
+    g = planes.reshape((planes.shape[0], k // ks, ks) + planes.shape[2:])
+    counts = jnp.sum(g.astype(jnp.int32), axis=2)          # [B-1, K/ks, ...]
+    return jnp.max(counts, axis=0)                         # [K/ks, ...]
+
+
+def kneading_ratio(q: jax.Array, bits: int, ks: int) -> jax.Array:
+    """T_ks / T_base of Fig 11: kneaded cycles over un-kneaded cycles."""
+    cyc = kneaded_cycles(q, bits, ks)
+    return jnp.sum(cyc) / (cyc.size * ks)
+
+
+# ---------------------------------------------------------------------------
+# 2. The deployable TPU kneaded-weight format
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KneadedWeight:
+    """A [K, N] weight matrix in kneaded (packed bit-plane) form.
+
+    Attributes:
+      planes:    uint32 [B-1, K/32, N] — magnitude planes, bit-packed along K.
+      signs:     uint32 [K/32, N]      — sign bits (1 = negative), packed.
+      scale:     f32 broadcastable to [1, N] — per-output-channel scale.
+      occupancy: int32 [B-1, K/ks, N/n_block] — per-(plane, tile) essential-bit
+                 presence (the pass-mark metadata consumed by the kernel).
+      bits:      static fixed-point width B.
+      ks:        static kneading stride == kernel K-tile extent.
+      n_block:   static kernel N-tile extent for occupancy granularity.
+      k, n:      static logical dims.
+    """
+
+    planes: jax.Array
+    signs: jax.Array
+    scale: jax.Array
+    occupancy: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True), default=8)
+    ks: int = dataclasses.field(metadata=dict(static=True), default=256)
+    n_block: int = dataclasses.field(metadata=dict(static=True), default=128)
+    k: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def shape(self):
+        return (self.k, self.n)
+
+    def packed_bytes(self) -> int:
+        """HBM bytes of the kneaded format (planes + signs + scale + occ)."""
+        return (
+            self.planes.size * 4
+            + self.signs.size * 4
+            + self.scale.size * 4
+            + self.occupancy.size * 4
+        )
+
+    def dense_bf16_bytes(self) -> int:
+        return self.k * self.n * 2
+
+
+def knead(
+    w: jax.Array,
+    bits: int = 8,
+    ks: int = 256,
+    n_block: int = 128,
+    *,
+    qt: Optional[QuantizedTensor] = None,
+) -> KneadedWeight:
+    """Quantize (unless ``qt`` given) and knead a [K, N] weight matrix.
+
+    K must be a multiple of lcm(32, ks); N a multiple of n_block.  Model dims
+    in this framework are multiples of 128, so this holds by construction.
+    """
+    if qt is None:
+        qt = quantize(w, bits=bits, axis=-1)
+    q = qt.q
+    if q.ndim != 2:
+        raise ValueError(f"knead expects [K, N], got {q.shape}")
+    k, n = q.shape
+    if k % max(32, ks) or n % n_block:
+        raise ValueError(f"shape {q.shape} incompatible with ks={ks}, n_block={n_block}")
+    mag = bitplanes.magnitude_planes(q, qt.bits)                # [B-1, K, N]
+    planes = bitplanes.pack_bits(mag, axis=1)                   # [B-1, K/32, N]
+    signs = bitplanes.pack_bits((q < 0).astype(jnp.uint8), axis=0)
+    occ = bitplanes.plane_tile_occupancy(mag, ks, n_block)
+    scale = qt.scale.reshape(1, -1) if qt.scale.ndim else qt.scale
+    return KneadedWeight(
+        planes=planes, signs=signs, scale=scale.astype(jnp.float32),
+        occupancy=occ, bits=qt.bits, ks=ks, n_block=n_block, k=k, n=n,
+    )
+
+
+def unknead(kw: KneadedWeight) -> jax.Array:
+    """Exact float reconstruction: equals dequantize(quantize(w)) of knead()."""
+    mag = bitplanes.unpack_bits(kw.planes, axis=1).astype(jnp.int32)  # [B-1,K,N]
+    weights = (2 ** jnp.arange(kw.bits - 1, dtype=jnp.int32)).reshape(-1, 1, 1)
+    absq = jnp.sum(mag * weights, axis=0)                             # [K, N]
+    sign = 1 - 2 * bitplanes.unpack_bits(kw.signs, axis=0).astype(jnp.int32)
+    return (absq * sign).astype(jnp.float32) * kw.scale

@@ -1,0 +1,130 @@
+"""Fixed-point quantization — the substrate under weight kneading.
+
+The paper quantizes fp32 Caffe weights to fixed-point-16 ("fp16" in the
+paper's nomenclature) and int8, then fine-tunes.  We implement symmetric
+per-output-channel fixed-point quantization for B in {2..16} bits.
+
+Conventions
+-----------
+* ``q`` is a signed integer code in ``[-(2^{B-1}-1), 2^{B-1}-1]`` stored in the
+  smallest sufficient integer dtype (int8 for B<=8 else int16/int32).
+* ``w ~= q * scale`` with ``scale`` broadcast along the *output-channel* axis
+  (last axis by convention: weights are stored ``[..., K, N]`` and channel = N).
+* We deliberately exclude ``-2^{B-1}`` from the code range so that ``|q|`` fits
+  in B-1 magnitude bits — this keeps the sign-magnitude bit-plane
+  decomposition (`bitplanes.py`) exactly B-1 planes + sign, mirroring the
+  paper's fixed-point layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantizedTensor",
+    "storage_dtype",
+    "quantize",
+    "dequantize",
+    "fake_quantize",
+]
+
+
+def storage_dtype(bits: int) -> jnp.dtype:
+    """Smallest signed integer dtype that can hold a ``bits``-bit code."""
+    if bits <= 8:
+        return jnp.int8
+    if bits <= 16:
+        return jnp.int16
+    return jnp.int32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """A symmetric fixed-point tensor: ``value ~= q.astype(f32) * scale``.
+
+    Attributes:
+      q:     integer codes, shape ``shape``.
+      scale: f32 scales, broadcastable against ``q`` (per-channel on ``axis``).
+      bits:  static bit width B (includes the sign bit).
+      axis:  static channel axis the scales follow.
+    """
+
+    q: jax.Array
+    scale: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True), default=8)
+    axis: int = dataclasses.field(metadata=dict(static=True), default=-1)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return dequantize(self, dtype)
+
+
+def _channel_absmax(w: jax.Array, axis) -> jax.Array:
+    """abs-max reduced over every axis except ``axis`` (kept, broadcastable).
+    ``axis=None`` -> per-tensor scale (one fixed-point format for the whole
+    matrix — the paper's 2018-accelerator setting; per-channel scales
+    normalize each channel to the full code range and hide bit-level slack).
+    """
+    if axis is None:
+        return jnp.max(jnp.abs(w)).reshape((1,) * w.ndim)
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis % w.ndim)
+    return jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+
+
+def quantize(
+    w: jax.Array,
+    bits: int = 8,
+    axis: int = -1,
+    *,
+    scale: Optional[jax.Array] = None,
+    reduce_axes=None,
+) -> QuantizedTensor:
+    """Symmetric per-channel quantization of ``w`` to ``bits`` bits.
+
+    ``axis`` is the channel axis (the output-feature axis for weight
+    matrices); one scale per channel.  Pass ``scale`` to reuse a calibrated
+    scale (e.g. when re-quantizing fine-tuned weights).  ``reduce_axes``
+    restricts the abs-max reduction (e.g. ``(-2,)`` for stacked [L, K, N]
+    weights: one scale per (layer, channel) instead of per channel).
+    """
+    if not 2 <= bits <= 16:
+        raise ValueError(f"bits must be in [2, 16], got {bits}")
+    w = w.astype(jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    if scale is None:
+        if reduce_axes is not None:
+            absmax = jnp.max(jnp.abs(w), axis=tuple(reduce_axes),
+                             keepdims=True)
+        else:
+            absmax = _channel_absmax(w, axis)
+        # Guard all-zero channels: scale 1.0 yields q == 0 there.
+        scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax)
+    return QuantizedTensor(
+        q=q.astype(storage_dtype(bits)), scale=scale.astype(jnp.float32),
+        bits=bits, axis=axis,
+    )
+
+
+def dequantize(t: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    return (t.q.astype(jnp.float32) * t.scale).astype(dtype)
+
+
+def fake_quantize(w: jax.Array, bits: int = 8, axis: int = -1) -> jax.Array:
+    """Quantize-dequantize round trip (for quantization-aware fine-tuning,
+    the paper's §IV accuracy-recovery step) with a straight-through estimator
+    so gradients flow to ``w`` unchanged."""
+    qdq = dequantize(quantize(w, bits=bits, axis=axis), jnp.float32)
+    w32 = w.astype(jnp.float32)
+    return (w32 + jax.lax.stop_gradient(qdq - w32)).astype(w.dtype)

@@ -1,0 +1,102 @@
+"""Split-and-Accumulate (SAC) — the paper's computing pattern, as JAX ops.
+
+MAC computes ``sum_i A_i * W_i`` pair-wise.  SAC (paper Eq. 2) regroups by bit:
+
+    sum_i A_i * W_i  =  sum_b 2^b * ( sum_i A_i * W_i^b )
+
+keeping one *segment accumulator* per bit position and performing the
+shift-and-add **once** at the end (the rear adder tree).  Three interchangeable
+implementations, all numerically identical on quantized weights:
+
+* ``impl="planes"`` — the paper-faithful decomposition: one MXU pass per
+  non-empty bit plane, per-plane segment accumulators, single 2^b reduction.
+  (Pure jnp; the Pallas kernel in ``repro.kernels.sac_matmul`` is the tiled
+  TPU version with occupancy skipping — this is its semantic oracle.)
+* ``impl="int"``    — the production path: one integer-code matmul with the
+  scale applied once in the epilogue (SAC's "defer all shifting/scaling to
+  the rear" applied at tile granularity).  Same math, MXU-optimal.
+* ``impl="pallas"`` — dispatch to the Pallas kernel (interpret=True on CPU).
+
+All paths return ``A @ dequantize(Wq)`` exactly (float32 accumulation).
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplanes
+from repro.core.kneading import KneadedWeight, knead
+from repro.core.quantization import QuantizedTensor
+
+__all__ = ["sac_matmul", "sac_matmul_planes", "sac_matmul_int", "TetrisLinear"]
+
+
+def sac_matmul_planes(a: jax.Array, kw: KneadedWeight) -> jax.Array:
+    """Paper-faithful SAC: per-plane matmuls + single rear shift-and-add.
+
+    Segment accumulators S_b = A @ signed_plane_b; output = scale * sum 2^b S_b.
+    Planes whose occupancy is empty everywhere are genuinely skipped by the
+    Pallas kernel; here (oracle) we compute all planes.
+    """
+    mag = bitplanes.unpack_bits(kw.planes, axis=1)                 # [B-1, K, N]
+    sign = 1 - 2 * bitplanes.unpack_bits(kw.signs, axis=0).astype(jnp.int8)
+    a32 = a.astype(jnp.float32)
+    segments = []
+    for b in range(kw.bits - 1):                                   # static loop
+        plane = (mag[b].astype(jnp.int8) * sign).astype(jnp.float32)
+        segments.append(a32 @ plane)                               # S_b
+    seg = jnp.stack(segments)                                      # [B-1, M, N]
+    weights = (2.0 ** jnp.arange(kw.bits - 1)).reshape(-1, 1, 1)
+    out = jnp.sum(seg * weights, axis=0)                           # rear adder
+    return out * kw.scale                                          # scale once
+
+
+def sac_matmul_int(a: jax.Array, q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Integer-code matmul with deferred (epilogue) scaling.
+
+    ``q`` is the signed code matrix [K, N]; scale broadcast [1, N].  f32
+    accumulation; codes cast to f32 are exact for |q| < 2^24 (bits <= 16).
+    """
+    out = jnp.dot(a.astype(jnp.float32), q.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out * scale
+
+
+def sac_matmul(
+    a: jax.Array,
+    kw: KneadedWeight,
+    impl: Literal["planes", "int", "pallas"] = "int",
+) -> jax.Array:
+    """SAC matmul of activations [..., K] against a kneaded weight [K, N]."""
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1])
+    if impl == "planes":
+        out = sac_matmul_planes(a2, kw)
+    elif impl == "int":
+        from repro.core.kneading import unknead  # codes * scale, exact
+        out = a2.astype(jnp.float32) @ unknead(kw)
+    elif impl == "pallas":
+        from repro.kernels.sac_matmul.ops import sac_matmul_pallas
+        out = sac_matmul_pallas(a2, kw)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return out.reshape(lead + (kw.n,)).astype(a.dtype)
+
+
+class TetrisLinear:
+    """A linear layer whose weights live in kneaded form (serving path).
+
+    Functional: ``TetrisLinear.knead_params(w, bits, ks)`` converts a trained
+    float [K, N] kernel; ``TetrisLinear.apply(params, x)`` runs SAC matmul.
+    """
+
+    @staticmethod
+    def knead_params(w: jax.Array, bits: int = 8, ks: int = 256) -> KneadedWeight:
+        return knead(w, bits=bits, ks=ks)
+
+    @staticmethod
+    def apply(params: KneadedWeight, x: jax.Array,
+              impl: Literal["planes", "int", "pallas"] = "int") -> jax.Array:
+        return sac_matmul(x, params, impl=impl)

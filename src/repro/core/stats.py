@@ -1,0 +1,72 @@
+"""Zero-value / zero-bit statistics — reproduces the paper's Table 1 & Fig 2.
+
+All statistics are computed on *quantized codes* (the representation the
+accelerator sees), in sign-magnitude form consistent with
+``bitplanes.magnitude_planes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplanes
+from repro.core.quantization import quantize
+
+__all__ = ["WeightBitStats", "weight_bit_stats", "aggregate_stats"]
+
+
+@dataclasses.dataclass
+class WeightBitStats:
+    """Bit-level statistics of one weight tensor (paper Table 1 / Fig 2)."""
+
+    n_weights: int
+    zero_value_frac: float          # Table 1 col 2
+    zero_bit_frac: float            # Table 1 col 3 (over B-1 magnitude bits)
+    per_bit_density: np.ndarray     # Fig 2: essential-bit (1s) fraction per position
+    bits: int
+
+    def as_row(self) -> Dict[str, float]:
+        return {
+            "n_weights": self.n_weights,
+            "zero_value_pct": 100.0 * self.zero_value_frac,
+            "zero_bit_pct": 100.0 * self.zero_bit_frac,
+        }
+
+
+def weight_bit_stats(w: jax.Array, bits: int = 16) -> WeightBitStats:
+    """Quantize ``w`` to ``bits`` fixed point and measure bit-level slack."""
+    w2 = w.reshape(-1, w.shape[-1]) if w.ndim > 1 else w.reshape(-1, 1)
+    qt = quantize(w2, bits=bits, axis=None)  # per-tensor: paper-faithful
+    q = qt.q
+    zero_vals = jnp.mean((q == 0).astype(jnp.float32))
+    mag = jnp.abs(q.astype(jnp.int32))
+    # per-position essential density over B-1 magnitude bit positions
+    shifts = jnp.arange(bits - 1, dtype=jnp.int32)
+    per_bit = jnp.stack([jnp.mean(((mag >> b) & 1).astype(jnp.float32))
+                         for b in shifts])
+    total_essential = jnp.mean(
+        bitplanes.popcount(mag).astype(jnp.float32)) / (bits - 1)
+    return WeightBitStats(
+        n_weights=int(q.size),
+        zero_value_frac=float(zero_vals),
+        zero_bit_frac=float(1.0 - total_essential),
+        per_bit_density=np.asarray(per_bit),
+        bits=bits,
+    )
+
+
+def aggregate_stats(stats: Dict[str, WeightBitStats]) -> WeightBitStats:
+    """Weight-count-weighted aggregate across layers (the GeoMean row)."""
+    total = sum(s.n_weights for s in stats.values())
+    zv = sum(s.zero_value_frac * s.n_weights for s in stats.values()) / total
+    zb = sum(s.zero_bit_frac * s.n_weights for s in stats.values()) / total
+    bits = next(iter(stats.values())).bits
+    pb = sum(s.per_bit_density * s.n_weights for s in stats.values()) / total
+    return WeightBitStats(
+        n_weights=total, zero_value_frac=zv, zero_bit_frac=zb,
+        per_bit_density=pb, bits=bits,
+    )

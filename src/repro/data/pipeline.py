@@ -1,0 +1,68 @@
+"""Deterministic, stateless, resumable synthetic token pipeline.
+
+Production framing: every batch is a pure function of (seed, step), so
+  * resume-after-failure = restart at the checkpointed step (no reader state),
+  * elastic rescale = recompute the per-host slice for the new topology,
+  * no host is ever a straggler on data (generation is O(batch) integer math).
+
+The stream is a mixture of (a) a Zipfian unigram field and (b) short
+arithmetic-progression motifs, giving a learnable next-token structure so
+example training curves actually descend (examples/train_smollm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    zipf_alpha: float = 1.1
+    motif_period: int = 17
+
+
+class SyntheticTokens:
+    """Indexable by step; shardable by (host_index, host_count)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        # precompute a Zipf CDF over the vocab (numpy, host-side, once)
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = ranks ** (-cfg.zipf_alpha)
+        self._cdf = jnp.asarray(np.cumsum(p / p.sum()), jnp.float32)
+
+    def _batch_key(self, step: int) -> jax.Array:
+        return jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed), step)
+
+    def global_batch(self, step: int) -> Dict[str, jax.Array]:
+        """The full [B, S+1] token block for ``step`` (labels = shift-by-1)."""
+        cfg = self.cfg
+        key = self._batch_key(step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        b, s = cfg.global_batch, cfg.seq_len + 1
+        u = jax.random.uniform(k1, (b, s))
+        zipf = jnp.searchsorted(self._cdf, u).astype(jnp.int32)
+        # motif: deterministic arithmetic progression inserted periodically
+        start = jax.random.randint(k2, (b, 1), 0, cfg.vocab_size)
+        stride = jax.random.randint(k3, (b, 1), 1, 7)
+        pos = jnp.arange(s)[None, :]
+        motif = (start + stride * pos) % cfg.vocab_size
+        use_motif = (pos % cfg.motif_period) < (cfg.motif_period // 2)
+        toks = jnp.where(use_motif, motif, zipf).astype(jnp.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def host_batch(self, step: int, host_index: int,
+                   host_count: int) -> Dict[str, jax.Array]:
+        """This host's contiguous slice of the global batch."""
+        full = self.global_batch(step)
+        per = self.cfg.global_batch // host_count
+        lo = host_index * per
+        return jax.tree.map(lambda x: x[lo:lo + per], full)

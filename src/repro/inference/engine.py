@@ -1,0 +1,132 @@
+"""Batched serving engine with the Tetris kneaded-weight path.
+
+``ServingEngine`` owns: prefill -> padded KV cache -> batched greedy/sampled
+decode.  ``knead_params`` converts a trained float checkpoint into the
+serving representation (QuantizedTensor int8 / PackedInt4), the deployable
+form of the paper's weight kneading (DESIGN.md §2) — every projection
+matmul below runs as integer codes with a single epilogue scale (SAC).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.quantization import quantize
+from repro.kernels.kneaded_gemm.ref import pack_int4
+from repro.models.layers import PackedInt4
+from repro.models.lm import LanguageModel
+
+PyTree = Any
+
+_KNEADABLE = ("wq", "wk", "wv", "wo", "wi", "wi_gate", "wi_up", "up",
+              "down", "w_in", "w_out", "in_proj", "out_proj", "unembed")
+
+
+def knead_params(params: PyTree, bits: int = 8,
+                 min_dim: int = 128) -> PyTree:
+    """Quantize every kneadable projection leaf to intN serving form.
+
+    Stacked [L, K, N] leaves are quantized per (layer, out-channel).
+    bits=8 -> QuantizedTensor; bits=4 -> PackedInt4 (nibble-packed along K).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        name = keys[-1] if keys else ""
+        ok = (name in _KNEADABLE and hasattr(leaf, "ndim") and leaf.ndim >= 2
+              and leaf.shape[-1] >= min_dim and leaf.shape[-2] >= min_dim
+              and leaf.shape[-2] % 2 == 0)
+        if not ok:
+            out.append(leaf)
+            continue
+        qt = quantize(leaf, bits=bits, axis=-1, reduce_axes=(-2,))
+        scale = qt.scale  # [..., 1, N] per (stack..., out-channel)
+        if bits == 4:
+            k = leaf.shape[-2]
+            q2 = qt.q.reshape((-1,) + leaf.shape[-2:])
+            packed = jnp.stack([pack_int4(q) for q in q2])
+            packed = packed.reshape(leaf.shape[:-2] + (k // 2, leaf.shape[-1]))
+            out.append(PackedInt4(packed=packed, scale=scale, k=k))
+        else:
+            out.append(dataclasses.replace(qt, scale=scale))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def serving_bytes(params: PyTree) -> int:
+    """HBM bytes of a serving param tree (bf16 floats, intN codes)."""
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        if hasattr(leaf, "dtype") and hasattr(leaf, "size"):
+            itemsize = jnp.dtype(leaf.dtype).itemsize
+            if jnp.issubdtype(leaf.dtype, jnp.floating):
+                itemsize = 2     # floats serve as bf16
+            total += leaf.size * itemsize
+    return total
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    max_len: int = 512
+    temperature: float = 0.0      # 0 => greedy
+    quant_bits: int = 0           # 0 => bf16, else 8 or 4
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: PyTree,
+                 scfg: ServingConfig = ServingConfig()):
+        self.cfg, self.scfg = cfg, scfg
+        self.model = LanguageModel(cfg)
+        self.params = (knead_params(params, bits=scfg.quant_bits)
+                       if scfg.quant_bits else params)
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(3,))
+
+    def _pad_cache(self, cache: PyTree, cur: int) -> PyTree:
+        pad_to = self.scfg.max_len
+
+        def pad(x):
+            # attention caches: seq axis at -3; scale arrays: seq at -2
+            if x.ndim >= 4 and x.shape[-3] == cur:
+                pads = [(0, 0)] * x.ndim
+                pads[-3] = (0, pad_to - cur)
+                return jnp.pad(x, pads)
+            if (x.ndim >= 3 and x.shape[-2] == cur
+                    and x.dtype == jnp.float32):
+                pads = [(0, 0)] * x.ndim
+                pads[-2] = (0, pad_to - cur)
+                return jnp.pad(x, pads, constant_values=1.0)
+            return x
+        return jax.tree.map(pad, cache)
+
+    def generate(self, batch: Dict[str, jax.Array], num_tokens: int,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+        """Prefill on batch["tokens"] then decode ``num_tokens`` greedily
+        (or sampled at temperature>0).  Returns [B, num_tokens] int32."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        assert s + num_tokens <= self.scfg.max_len
+        logits, cache = self._prefill(self.params, batch)
+        cache = self._pad_cache(cache, s)
+        outs = []
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tok = self._select(logits, key)
+        for i in range(num_tokens):
+            outs.append(tok)
+            pos = jnp.full((b,), s + i, jnp.int32)
+            logits, cache = self._decode(self.params, tok[:, None], pos,
+                                         cache)
+            key, sub = jax.random.split(key)
+            tok = self._select(logits, sub)
+        return jnp.stack(outs, axis=1)
+
+    def _select(self, logits: jax.Array, key) -> jax.Array:
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / self.scfg.temperature,
+            axis=-1).astype(jnp.int32)

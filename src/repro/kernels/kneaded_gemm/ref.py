@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the kneaded integer GEMM kernel (int8 / packed int4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """[K/2, N] int8 (two nibbles along K, little-nibble first) -> [K, N] int8."""
+    low = jnp.left_shift(packed, 4)
+    low = jnp.right_shift(low, 4)                       # sign-extended low nibble
+    high = jnp.right_shift(packed, 4)                   # arithmetic shift: high
+    k2, n = packed.shape
+    out = jnp.stack([low, high], axis=1)                # [K/2, 2, N]
+    return out.reshape(k2 * 2, n)
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """[K, N] int8 in [-8, 7] -> [K/2, N] int8 nibble-packed."""
+    k, n = q.shape
+    assert k % 2 == 0
+    q = q.reshape(k // 2, 2, n)
+    low = q[:, 0].astype(jnp.uint8) & 0xF
+    high = (q[:, 1].astype(jnp.uint8) & 0xF) << 4
+    return (low | high).astype(jnp.int8)
+
+
+def kneaded_gemm_ref(a: jax.Array, q: jax.Array, scale: jax.Array,
+                     packed4: bool = False) -> jax.Array:
+    """f32 reference: A @ (q * scale) with epilogue scaling."""
+    if packed4:
+        q = unpack_int4(q)
+    out = jnp.dot(a.astype(jnp.float32), q.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out * scale

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: SAC bit-plane matmul with occupancy skipping.
+
+Hardware mapping of the paper's PE (Fig 5) onto the TPU memory hierarchy:
+
+  throttle buffer + pass marks  -> per-(plane, K-tile, N-tile) occupancy map,
+                                   delivered via scalar prefetch (SMEM) so the
+                                   skip decision is known before the tile body
+  splitter array                -> in-VMEM unpack of bit-packed planes
+                                   (32 weights/uint32 word) + sign application
+  16x16 segment adder fabric    -> one MXU dot per *non-empty* plane tile
+  segment registers S0..S15     -> VMEM scratch accumulator [B-1, bm, bn] f32
+  rear adder tree (shift once)  -> epilogue ``sum_b 2^b * S_b`` executed once
+                                   per output tile at the last K step
+  per-channel scale             -> applied once in the same epilogue (SAC's
+                                   "no intermediate pair-wise partial sums")
+
+Tiling: grid (M/bm, N/bn, K/bk) with K innermost (revisiting=output-stationary).
+``bk`` equals the kneading stride KS — the skip granularity trade-off the
+paper sweeps in Fig 11 (larger KS: fewer, coarser skip opportunities but less
+metadata; smaller KS: more skips, more SMEM metadata).
+
+VMEM budget per step (bm=bn=256, bk=512, B=8):
+  A tile 256x512x4B = 512KB; plane tiles 7x(512/32)x256x4B = 114KB;
+  segment scratch 7x256x256x4B = 1.8MB; out 256KB  => ~2.7MB << VMEM.
+MXU alignment: bm, bn multiples of 128; bk multiple of 256 (>= 8 sublanes of
+packed words after the x32 unpack).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+WORD = 32
+
+
+def _unpack_words(words: jax.Array, bk: int) -> jax.Array:
+    """[bk//32, bn] uint32 -> [bk, bn] uint32 {0,1} (little-endian per word)."""
+    nw, bn = words.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (nw, WORD, bn), 1)
+    bits = (words[:, None, :] >> shifts) & jnp.uint32(1)
+    return bits.reshape(nw * WORD, bn)
+
+
+def sac_matmul_kernel(
+    occ_ref,        # scalar prefetch: [B-1, K/bk, N/bn] int32
+    a_ref,          # [bm, bk] activations
+    planes_ref,     # [B-1, bk//32, bn] uint32 packed magnitude planes
+    signs_ref,      # [bk//32, bn] uint32 packed sign bits
+    scale_ref,      # [1, bn] f32 per-channel scales
+    out_ref,        # [bm, bn] f32
+    seg_ref,        # VMEM scratch: [B-1, bm, bn] f32 segment accumulators
+    *,
+    bits: int,
+    nk: int,
+):
+    k_idx = pl.program_id(2)
+    n_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        seg_ref[...] = jnp.zeros_like(seg_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    sign_bits = _unpack_words(signs_ref[...], a.shape[1])
+    # sign multiplier in {-1, +1}: 1 - 2*bit
+    signf = 1.0 - 2.0 * sign_bits.astype(jnp.float32)
+
+    for b in range(bits - 1):  # static unroll over planes ("splitter array")
+        @pl.when(occ_ref[b, k_idx, n_idx] > 0)   # pass-mark skip
+        def _accumulate(b=b):
+            plane = _unpack_words(planes_ref[b], a.shape[1]).astype(jnp.float32)
+            seg_ref[b] += jax.lax.dot_general(
+                a, plane * signf,
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+    @pl.when(k_idx == nk - 1)
+    def _rear_adder_tree():
+        # Single shift-and-add over segments + single dequant scale (SAC).
+        weights = (2.0 ** jnp.arange(bits - 1, dtype=jnp.float32)).reshape(
+            bits - 1, 1, 1)
+        acc = jnp.sum(seg_ref[...] * weights, axis=0)
+        out_ref[...] = acc * scale_ref[...]
+
+
+def sac_matmul_pallas_call(
+    a: jax.Array,
+    planes: jax.Array,
+    signs: jax.Array,
+    scale: jax.Array,
+    occupancy: jax.Array,
+    *,
+    bits: int,
+    bm: int = 256,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Raw pallas_call wrapper (shapes must already be tile-aligned)."""
+    m, k = a.shape
+    n = planes.shape[-1]
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert occupancy.shape == (bits - 1, k // bk, n // bn), occupancy.shape
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        # NB: with scalar prefetch, index maps receive the prefetch ref last.
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk, occ: (i, kk)),
+            pl.BlockSpec((bits - 1, bk // WORD, bn),
+                         lambda i, j, kk, occ: (0, kk, j)),
+            pl.BlockSpec((bk // WORD, bn), lambda i, j, kk, occ: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk, occ: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, occ: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bits - 1, bm, bn), jnp.float32)],
+    )
+    kernel = functools.partial(sac_matmul_kernel, bits=bits, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(occupancy, a, planes, signs, scale)

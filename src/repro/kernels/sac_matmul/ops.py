@@ -1,0 +1,57 @@
+"""Jitted public wrapper for the SAC bit-plane Pallas kernel.
+
+Handles padding/tiling policy and backend dispatch: compiled Pallas on TPU,
+``interpret=True`` elsewhere (this container is CPU-only; interpret mode
+executes the kernel body faithfully for validation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kneading import KneadedWeight
+from repro.kernels.sac_matmul.kernel import sac_matmul_pallas_call
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "ks", "n_block", "bm", "interpret"))
+def _run(a, planes, signs, scale, occupancy, *, bits, ks, n_block, bm, interpret):
+    return sac_matmul_pallas_call(
+        a, planes, signs, scale, occupancy,
+        bits=bits, bm=bm, bn=n_block, bk=ks,
+        interpret=interpret,
+    )
+
+
+def sac_matmul_pallas(
+    a: jax.Array,
+    kw: KneadedWeight,
+    *,
+    bm: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """[M, K] @ kneaded [K, N] -> [M, N] f32 via the Pallas SAC kernel.
+
+    M is padded up to the tile size; K/N alignment is guaranteed by the
+    kneaded format (ks | K, n_block | N).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, k = a.shape
+    assert k == kw.k, (k, kw.k)
+    bm_eff = min(bm, max(8, m))
+    pad = (-m) % bm_eff
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+    out = _run(
+        a, kw.planes, kw.signs, kw.scale, kw.occupancy,
+        bits=kw.bits, ks=kw.ks, n_block=kw.n_block, bm=bm_eff,
+        interpret=interpret,
+    )
+    return out[:m] if pad else out

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the SAC bit-plane matmul kernel.
+
+The reference computes ``A @ unknead(KW)`` in f32 — by construction exactly
+``scale * sum_b 2^b (A @ S_b)`` (see repro.core.sac).  The Pallas kernel must
+match this to f32 matmul tolerance for every shape/dtype/bit-width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kneading import KneadedWeight, unknead
+
+
+def sac_matmul_ref(a: jax.Array, kw: KneadedWeight) -> jax.Array:
+    """[M, K] @ kneaded [K, N] -> [M, N] f32."""
+    return jnp.dot(a.astype(jnp.float32), unknead(kw),
+                   preferred_element_type=jnp.float32)

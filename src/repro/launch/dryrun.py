@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract memory / cost / roofline inputs.
+
+The two lines above MUST stay the first statements of this module (before
+any jax import): jax locks the device count at first backend init, and the
+dry-run needs 512 placeholder host devices to build the 2x16x16 mesh.
+Nothing is allocated — all inputs are ShapeDtypeStructs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch arctic-480b \
+      --shape decode_32k --quant int8
+
+Artifacts: benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>[__<quant>].json
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import shape_by_name
+from repro.configs.registry import ARCH_IDS, all_cells, applicable_shapes, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch.specs import build_cell
+from repro.runtime import hlo_analysis, pspec
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / \
+    "benchmarks" / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             quant=None, attn_impl=None, kv_bits=0, save=True,
+             verbose=True) -> dict:
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    shape = shape_by_name(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + \
+        (f"__{quant}" if quant else "") + \
+        (f"__{attn_impl}" if attn_impl else "") + \
+        (f"__kv{kv_bits}" if kv_bits else "")
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "quant": quant or "bf16", "attn_impl": attn_impl,
+              "chips": mesh.devices.size}
+    try:
+        step, args, donate, meta = build_cell(
+            arch, shape, mesh, quant=quant, attn_impl=attn_impl,
+            kv_bits=kv_bits)
+        result.update(meta)
+        rules = None
+        if meta.get("parallelism") == "dp":
+            from repro.runtime import sharding as shd
+            rules = {"batch": shd.dp_batch_axes(mesh, shape.global_batch),
+                     "seq": (), "model": (), "expert": ()}
+        with pspec.axis_rules(mesh, rules):
+            lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        stats = hlo_analysis.analyze_hlo(hlo)
+        hbm_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        terms = hlo_analysis.roofline_terms(
+            stats, chips=mesh.devices.size,
+            peak_flops=mesh_lib.PEAK_FLOPS_BF16,
+            hbm_bw=mesh_lib.HBM_BW, ici_bw=mesh_lib.ICI_BW,
+            hbm_bytes=max(hbm_bytes, 0))
+        result.update({
+            "ok": True,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+            },
+            "xla_cost_flops_per_iter": cost.get("flops", -1.0),
+            "hbm_bytes_per_device": max(hbm_bytes, 0),
+            "hlo_per_device": {
+                "dot_flops": stats.dot_flops,
+                "dot_bytes": stats.dot_bytes,
+                "collective_bytes": stats.collective_bytes,
+                "total_collective_bytes": stats.total_collective_bytes,
+            },
+            "roofline_terms_s": terms,
+            "dominant_term": max(terms, key=terms.get),
+        })
+        if verbose:
+            print(f"[OK] {tag}: lower {t_lower:.0f}s compile {t_compile:.0f}s "
+                  f"args {mem.argument_size_in_bytes/2**30:.2f}GiB "
+                  f"temp {mem.temp_size_in_bytes/2**30:.2f}GiB "
+                  f"dot_flops/dev {stats.dot_flops:.3e} "
+                  f"coll/dev {stats.total_collective_bytes:.3e}B "
+                  f"dominant {result['dominant_term']}")
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug, record it
+        result.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+    if save:
+        ART_DIR.mkdir(parents=True, exist_ok=True)
+        (ART_DIR / f"{tag}.json").write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant", choices=["bf16", "int8", "int4"], default=None)
+    ap.add_argument("--attn-impl", dest="attn_impl", default=None,
+                    choices=["masked", "flash"])
+    ap.add_argument("--kv-bits", dest="kv_bits", type=int, default=0,
+                    choices=[0, 8])
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, shape_by_name(args.shape))]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            r = run_cell(arch, shape.name, mp, quant=args.quant,
+                         attn_impl=args.attn_impl, kv_bits=args.kv_bits)
+            failures += 0 if r["ok"] else 1
+    print(f"dry-run complete: {len(cells) * len(meshes) - failures} ok, "
+          f"{failures} failed")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device.
+
+Production topology (TPU v5e):
+  single-pod : 16 x 16  = 256 chips, axes ("data", "model")
+  multi-pod  : 2 x 16 x 16 = 512 chips, axes ("pod", "data", "model")
+The "pod" axis carries data parallelism across pods (gradient all-reduce
+over DCN) and optionally pipeline stages (runtime.pipeline).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist right now, as a 1-D 'data' mesh (examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+# v5e hardware constants used by the roofline analysis (benchmarks/roofline).
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

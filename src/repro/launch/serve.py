@@ -1,0 +1,76 @@
+"""Serving launcher: batched generation with optional kneaded weights.
+
+``python -m repro.launch.serve --arch smollm-360m --quant 8 --tokens 32``
+trains nothing: initializes (or restores) params, kneads them to the
+requested precision, and serves a batch of synthetic prompts — the
+end-to-end demonstration of the paper's technique as a serving feature.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--quant", type=int, default=0, choices=[0, 8, 4])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore params from a training checkpoint dir")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import checkpointer as ckpt
+    from repro.configs.registry import get_config
+    from repro.inference.engine import (ServingConfig, ServingEngine,
+                                        serving_bytes)
+    from repro.models.lm import LanguageModel
+
+    cfg = get_config(args.arch, smoke=True)
+    model = LanguageModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        step = ckpt.latest_step(args.ckpt_dir)
+        if step is not None:
+            from repro.optim import adamw
+            from repro.train.step import TrainStepConfig
+            like = {"params": params,
+                    "opt": adamw.init(params,
+                                      TrainStepConfig().optimizer)}
+            params = ckpt.restore(args.ckpt_dir, step, like)["params"]
+            print(f"restored step {step} from {args.ckpt_dir}")
+
+    eng = ServingEngine(cfg, params, ServingConfig(
+        max_len=args.prompt_len + args.tokens + 8,
+        quant_bits=args.quant, temperature=args.temperature))
+    print(f"serving params: {serving_bytes(eng.params)/1e6:.2f} MB "
+          f"(quant={args.quant or 'bf16'})")
+
+    key = jax.random.PRNGKey(7)
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    batch = {"tokens": prompts}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.num_image_tokens, cfg.d_model))
+
+    t0 = time.perf_counter()
+    out = eng.generate(batch, args.tokens)
+    dt = time.perf_counter() - t0
+    print(f"generated [{args.batch} x {args.tokens}] in {dt:.2f}s "
+          f"({args.batch*args.tokens/dt:.1f} tok/s)")
+    for row in out[:2]:
+        print("  ", row.tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Input ShapeDtypeStruct stand-ins + sharded step assembly per cell.
+
+``build_cell(arch, shape, mesh, ...)`` returns (step_fn, args) where every
+arg is a ShapeDtypeStruct carrying its NamedSharding — ready for
+``jax.jit(step_fn).lower(*args)``.  Nothing is ever allocated.
+
+The Tetris serving modes substitute weight leaves:
+  quant="int8" -> QuantizedTensor codes (1 B/weight in HBM)
+  quant="int4" -> PackedInt4 nibbles   (0.5 B/weight)
+both with per-channel f32 scales — the kneaded decode path whose memory-
+roofline gain §Perf quantifies against the bf16 baseline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.configs.registry import get_config
+from repro.core.quantization import QuantizedTensor
+from repro.models.layers import PackedInt4
+from repro.models.lm import LanguageModel
+from repro.optim import adamw
+from repro.runtime import sharding
+from repro.train.step import TrainStepConfig, make_train_step
+
+PyTree = Any
+
+# weight-name suffixes eligible for kneading (2-D projection matrices);
+# embeddings stay bf16 (gather path), norms/gates are not matmuls.
+_KNEADABLE = ("wq", "wk", "wv", "wo", "wi", "wi_gate", "wi_up", "up",
+              "down", "w_in", "w_out", "in_proj", "out_proj", "unembed")
+
+
+def _sds(shape, dtype, mesh: Mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def param_sds(model: LanguageModel, mesh: Mesh, mode: str = "tp") -> PyTree:
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shardings = sharding.tree_shardings(shapes, mesh, mode)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def quantize_param_sds(params: PyTree, quant: str) -> PyTree:
+    """Replace kneadable 2-D weight SDS leaves with quantized containers."""
+    if quant in (None, "bf16", "none"):
+        return params
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        name = keys[-1] if keys else ""
+        shp = leaf.shape
+        ok = (name in _KNEADABLE and len(shp) >= 2
+              and shp[-1] >= 128 and shp[-2] >= 128)
+        if not ok:
+            out.append(leaf)
+            continue
+        kdim = shp[-2]
+        # scale [..., 1, N]: inherit only the weight's LAST-dim sharding
+        # (size-1 dims cannot carry the weight's K-dim partitioning)
+        wspec = leaf.sharding.spec
+        last = wspec[len(shp) - 1] if len(wspec) >= len(shp) else None
+        scale_sh = NamedSharding(leaf.sharding.mesh,
+                                 P(*([None] * (len(shp) - 1) + [last])))
+        scale_sds = jax.ShapeDtypeStruct(shp[:-2] + (1, shp[-1]),
+                                         jnp.float32, sharding=scale_sh)
+        if quant == "int8":
+            q = jax.ShapeDtypeStruct(shp, jnp.int8, sharding=leaf.sharding)
+            out.append(QuantizedTensor(q=q, scale=scale_sds, bits=8, axis=-1))
+        elif quant == "int4":
+            q = jax.ShapeDtypeStruct(shp[:-2] + (kdim // 2, shp[-1]),
+                                     jnp.int8, sharding=leaf.sharding)
+            out.append(PackedInt4(packed=q, scale=scale_sds, k=kdim))
+        else:
+            raise ValueError(quant)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_sds(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+              b_axes=None) -> Dict:
+    if b_axes is None:
+        b_axes = sharding.batch_axes(mesh)
+    bspec = b_axes if b_axes and shape.global_batch % int(
+        np.prod([mesh.shape[a] for a in b_axes])) == 0 else None
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), i32, mesh, P(bspec, None)),
+                 "labels": _sds((b, s), i32, mesh, P(bspec, None))}
+    elif shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), i32, mesh, P(bspec, None))}
+    else:
+        batch = {"token": _sds((b, 1), i32, mesh, P(bspec, None)),
+                 "pos": _sds((b,), i32, mesh, P(bspec))}
+    if cfg.family == "encdec" and shape.kind != "decode":
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), dt, mesh,
+                               P(bspec, None, None))
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["image_embeds"] = _sds((b, cfg.num_image_tokens, cfg.d_model),
+                                     dt, mesh, P(bspec, None, None))
+    return batch
+
+
+def cache_sds(model: LanguageModel, shape: InputShape, mesh: Mesh) -> PyTree:
+    spec = model.cache_spec(shape.global_batch, shape.seq_len)
+    shardings = sharding.cache_spec_sharding(spec, mesh, shape.global_batch)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        spec, shardings)
+
+
+def default_train_config(cfg: ModelConfig, shape: InputShape,
+                         mesh: Mesh, mode: str = "tp") -> TrainStepConfig:
+    """Pick a microbatch that bounds per-device logits/activation memory."""
+    axes = (sharding.dp_batch_axes(mesh, shape.global_batch)
+            if mode == "dp" else sharding.batch_axes(mesh))
+    n_batch_shards = int(np.prod([mesh.shape[a] for a in axes])) or 1
+    mb = shape.global_batch
+    # target: <= ~2^22 tokens*vocab bf16 per device per loss chunk; the loss
+    # is seq-chunked already, so bound microbatch to 32 sequences for the
+    # big-vocab archs and require divisibility by the batch shards.
+    target = 32 if cfg.vocab_size >= 50_000 else 64
+    if cfg.num_experts and cfg.sequence_parallel:
+        # MoE: every microbatch re-gathers the FSDP-sharded expert weights
+        # (dominant collective, §Perf it.3); SP keeps activations sharded,
+        # so run the full batch in one shot.
+        target = mb
+    while mb > n_batch_shards and mb > target:
+        mb //= 2
+    mb = max(mb, n_batch_shards)
+    state_dtype = "bfloat16" if cfg.param_count() > 5e10 else "float32"
+    return TrainStepConfig(
+        optimizer=adamw.AdamWConfig(state_dtype=state_dtype),
+        microbatch=0 if mb >= shape.global_batch else mb,
+        grad_dtype="bfloat16" if cfg.param_count() > 5e10 else "float32",
+    )
+
+
+def build_cell(arch: str, shape: InputShape, mesh: Mesh, *,
+               smoke: bool = False, quant: Optional[str] = None,
+               attn_impl: Optional[str] = None, kv_bits: int = 0):
+    """Returns (step_fn, args_tuple, donate_argnums, meta)."""
+    import dataclasses as dc
+    cfg = get_config(arch, smoke=smoke)
+    if attn_impl:
+        cfg = dc.replace(cfg, attn_impl=attn_impl)
+    if kv_bits and cfg.family in ("dense", "moe"):
+        cfg = dc.replace(cfg, kv_cache_bits=kv_bits)
+    model = LanguageModel(cfg)
+    # "dp" profile applies to training only; serving uses the "tp" layout.
+    # (A dedicated "serve" layout — output-dim-only sharding — was tried
+    # and REFUTED for dense decode: the batch axis already occupies "data",
+    # so combined-axis output sharding conflicts and the partitioner
+    # reshards at +3x traffic; and it breaks MoE expert storage.  §Perf
+    # iteration 7.  The decode weight-gather cost is instead attacked with
+    # kneaded int8/int4 weights — the paper's own lever.)
+    mode = cfg.parallelism if shape.kind == "train" else "tp"
+    b_axes = (sharding.dp_batch_axes(mesh, shape.global_batch)
+              if mode == "dp" else None)
+    params = param_sds(model, mesh, mode)
+    batch = batch_sds(cfg, shape, mesh, b_axes=b_axes)
+    meta = {"arch": arch, "shape": shape.name, "kind": shape.kind,
+            "quant": quant or "bf16", "parallelism": mode,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count()}
+
+    if shape.kind == "train":
+        ts = default_train_config(cfg, shape, mesh, mode=mode)
+        step = make_train_step(
+            model, ts,
+            param_shardings=jax.tree.map(lambda l: l.sharding, params))
+        opt_shapes = jax.eval_shape(
+            functools.partial(adamw.init, cfg=ts.optimizer), params)
+        opt_shardings = sharding.tree_shardings(opt_shapes, mesh, mode)
+        opt = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            opt_shapes, opt_shardings)
+        args = (params, opt, batch, None)
+        meta["microbatch"] = ts.microbatch
+        return step, args, (0, 1), meta
+
+    # serving runs bf16 weights (training keeps f32 masters)
+    params = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16,
+                                       sharding=l.sharding)
+        if jnp.issubdtype(l.dtype, jnp.floating) else l, params)
+    qparams = quantize_param_sds(params, quant)
+    if shape.kind == "prefill":
+        def prefill_step(p, b):
+            return model.prefill(p, b)
+        return prefill_step, (qparams, batch), (), meta
+
+    cache = cache_sds(model, shape, mesh)
+
+    def decode_step(p, token, pos, c):
+        return model.decode_step(p, token, pos, c)
+    args = (qparams, batch["token"], batch["pos"], cache)
+    return decode_step, args, (3,), meta

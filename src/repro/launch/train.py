@@ -1,0 +1,69 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On a real cluster each host runs this entrypoint (jax.distributed
+initializes from the TPU pod metadata); in this container it runs the smoke
+config on the host devices.  The production mesh shape and sharding rules
+are identical in both cases — only the device count differs.
+
+XLA flags for collective/compute overlap on TPU are set here (latency-hiding
+scheduler + async collectives), part of the distributed-optimization story.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+# Compute/communication overlap knobs (no-ops on CPU, required on TPU pods).
+_TPU_FLAGS = (
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_tpu_overlap_compute_collective_tc=true "
+    "--xla_enable_async_all_gather=true "
+    "--xla_enable_async_collective_permute=true "
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    args = ap.parse_args()
+
+    if os.environ.get("TPU_NAME"):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + " " + _TPU_FLAGS)
+
+    from repro.configs.registry import get_config
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.step import TrainStepConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    ts = TrainStepConfig(
+        optimizer=AdamWConfig(total_steps=args.steps),
+        microbatch=args.microbatch,
+        grad_compression=args.grad_compression)
+    tr = Trainer(cfg, TrainerConfig(num_steps=args.steps,
+                                    ckpt_every=args.ckpt_every,
+                                    ckpt_dir=args.ckpt_dir),
+                 ts=ts, global_batch=args.global_batch,
+                 seq_len=args.seq_len)
+    log = tr.run()
+    for s, m in sorted(log.items()):
+        print(f"step {s:6d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.3f}  {m['step_time_s']*1e3:.1f} ms")
+    if tr.timer.straggler_steps:
+        print("straggler steps:", tr.timer.straggler_steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""AdamW with pluggable state dtype — built here (no optax dependency).
+
+State shards exactly like the parameters (GSPMD propagates the in_shardings
+of the train step), so full-Adam memory is params*(1 + 2*state_bytes/4)
+per replica group — the FSDP axis divides it by |pod|*|data|.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # scalar int32
+    m: PyTree                # first moment  (opt dtype)
+    v: PyTree                # second moment (opt dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"     # "bfloat16" halves optimizer memory
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to 10%."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, s / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * frac)
+    return cfg.lr * warm * cos
+
+
+def init(params: PyTree, cfg: AdamWConfig) -> AdamWState:
+    dt = jnp.dtype(cfg.state_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(z, params),
+                      v=jax.tree.map(z, params))
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads: PyTree, state: AdamWState, params: PyTree,
+           cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd_core(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+        return ((p - lr * delta).astype(p.dtype),
+                m32.astype(dt), v32.astype(dt))
+
+    # NB: an lax.map-over-layers variant was tried to cap the f32 m32/v32
+    # temporaries; it REGRESSED temp by ~10 GiB because scan boundaries
+    # defeat donated-buffer aliasing (EXPERIMENTS.md §Perf, iteration log).
+    out = jax.tree.map(upd_core, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_m, new_v), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,98 @@
+"""Fault tolerance + straggler mitigation for the training loop.
+
+At 1000+ nodes, the assumptions are: (a) any step can raise (device loss,
+preemption, network partition) and the job must resume from the last durable
+checkpoint; (b) step-time outliers (stragglers) must be detected and
+surfaced, because a single slow host gates every synchronous collective.
+
+Components:
+  * ``RestartPolicy``      — bounded retries with exponential backoff.
+  * ``StepTimer``          — EWMA + robust z-score straggler watermark; at
+                             real scale the per-host step times come from the
+                             coordination service, here from the local clock.
+  * ``FailureInjector``    — deterministic fault injection for tests/examples
+                             (raises ``InjectedFailure`` at chosen steps).
+  * ``run_resilient_loop`` — the restart loop used by train.trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, List, Optional
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 3
+    backoff_s: float = 0.1
+    backoff_mult: float = 2.0
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    fail_at_steps: Iterable[int] = ()
+    fail_once: bool = True
+
+    def __post_init__(self):
+        self._pending = set(self.fail_at_steps)
+
+    def maybe_fail(self, step: int):
+        if step in self._pending:
+            if self.fail_once:
+                self._pending.discard(step)
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+class StepTimer:
+    """Tracks step latency; flags stragglers at mean + k*MAD."""
+
+    def __init__(self, k: float = 5.0, warmup: int = 3):
+        self.k = k
+        self.warmup = warmup
+        self.times: List[float] = []
+        self._t0: Optional[float] = None
+        self.straggler_steps: List[int] = []
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> float:
+        dt = time.perf_counter() - self._t0
+        if len(self.times) >= self.warmup:
+            med = sorted(self.times)[len(self.times) // 2]
+            mad = sorted(abs(t - med) for t in self.times)[len(self.times) // 2]
+            if dt > med + self.k * max(mad, 1e-4):
+                self.straggler_steps.append(step)
+        self.times.append(dt)
+        return dt
+
+
+def run_resilient_loop(
+    *,
+    start_step: int,
+    num_steps: int,
+    step_fn: Callable[[int], None],
+    restore_fn: Callable[[], int],
+    policy: RestartPolicy = RestartPolicy(),
+) -> int:
+    """Run ``step_fn(step)`` for steps [start, num_steps); on exception,
+    call ``restore_fn() -> resume_step`` and continue.  Returns restarts."""
+    restarts = 0
+    backoff = policy.backoff_s
+    step = start_step
+    while step < num_steps:
+        try:
+            step_fn(step)
+            step += 1
+        except Exception:  # noqa: BLE001 — any fault triggers the restart path
+            restarts += 1
+            if restarts > policy.max_restarts:
+                raise
+            time.sleep(backoff)
+            backoff *= policy.backoff_mult
+            step = restore_fn()
+    return restarts

@@ -1,0 +1,77 @@
+"""Logical-axis sharding constraints, mesh-agnostic for model code.
+
+Model code annotates activations with *logical* axes ("batch", "model",
+"seq", None).  The launcher installs a mapping from logical axes to physical
+mesh axes (e.g. batch -> ("pod", "data")); outside any mapping the helpers are
+no-ops, so the same model code runs on one CPU device and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "model": ("model",),
+    "expert": ("model",),
+    "seq": ("model",),  # sequence-parallel residuals (cfg.sequence_parallel)
+}
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> Dict[str, Tuple[str, ...]]:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    """Install a mesh + logical->physical mapping for `constrain` calls."""
+    prev = (getattr(_state, "mesh", None), getattr(_state, "rules", None))
+    _state.mesh = mesh
+    base = dict(DEFAULT_RULES)
+    # Drop physical axes the mesh doesn't actually have (single-pod mesh).
+    mesh_axes = set(mesh.axis_names)
+    base = {k: tuple(a for a in v if a in mesh_axes) for k, v in base.items()}
+    if rules:
+        base.update(rules)
+    _state.rules = base
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def resolve(spec: Sequence[Logical]) -> P:
+    """Map logical axis names to a PartitionSpec under the current rules."""
+    rules = current_rules()
+    out = []
+    for s in spec:
+        if s is None:
+            out.append(None)
+        elif isinstance(s, tuple):
+            axes = sum((rules.get(a, (a,)) for a in s), ())
+            out.append(axes if axes else None)
+        else:
+            axes = rules.get(s, (s,))
+            out.append(axes if axes else None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *spec: Logical) -> jax.Array:
+    """with_sharding_constraint under the installed mesh; no-op otherwise."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(spec)))

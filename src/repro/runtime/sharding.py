@@ -1,0 +1,222 @@
+"""Parameter / input partition rules (FSDP + TP + EP).
+
+The rules map parameter-tree paths to PartitionSpecs over the production mesh
+axes ("pod", "data", "model").  Strategy (MaxText-style):
+
+  * 2-D projection weights:  P(fsdp, "model")  — input dim sharded over the
+    data axes (FSDP, gathered on use, which the per-layer scan makes a
+    per-layer all-gather), output dim tensor-parallel over "model".
+  * "reducing" projections (wo / out_proj / down — whose *input* is the
+    TP-sharded dim): P("model", fsdp), so the subsequent contraction
+    generates the canonical TP all-reduce.
+  * MoE experts: expert axis over "model" (EP), input dim over fsdp.
+  * embed [V, D]: P("model", fsdp);  unembed [D, V]: P(fsdp, "model").
+  * 1-D scales/biases and tiny tensors: replicated.
+
+Any axis that does not divide its dim evenly falls back to None (correct,
+just less sharded) — this keeps every assigned arch lowerable without
+per-arch special cases.  Stacked-layer leading dims (scan) are never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# parameter name -> (spec for trailing dims), matched on the *last* path key
+# or a distinctive substring of the joined path.  fsdp == ("pod","data")∩mesh.
+_REVERSED = ("wo", "out_proj", "down", "w_out")          # P(model, fsdp)
+_REPLICATED = ("scale", "bias", "a_log", "dt_bias", "d_skip", "f_bias",
+               "cross_gate", "qnorm", "knorm", "b")
+_POS = ("pos_embed", "dec_pos_embed")
+
+
+def _axes_of(mesh: Mesh, names: Tuple[str, ...]) -> Tuple[str, ...]:
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if not axes:
+        return False
+    n = int(np.prod([mesh.shape[a] for a in (
+        axes if isinstance(axes, tuple) else (axes,))]))
+    return dim % n == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axes):
+    return axes if _fits(dim, mesh, axes) else None
+
+
+def dp_batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    """Batch axes for the "dp" profile: the largest axis combination that
+    divides the batch, preferring to keep "pod" as plain DP on multi-pod
+    (pods must not duplicate work)."""
+    # Any axis NOT in the batch replicates compute: leaving "pod" out
+    # duplicates 2x, leaving "model" out 16x (measured: multi-pod dp train
+    # cells dropped to useful=0.05 with batch over (pod,data) — §Perf it.8),
+    # so prefer dropping "pod" first.
+    for cand in (("pod", "data", "model"), ("data", "model"),
+                 ("pod", "data"), ("data",)):
+        axes = _axes_of(mesh, cand)
+        if axes and _fits(global_batch, mesh, axes):
+            return axes
+    return ()
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               mode: str = "tp") -> P:
+    """PartitionSpec for one parameter leaf given its tree path.
+
+    mode="tp": FSDP over (pod, data) + tensor parallel over "model".
+    mode="dp": ZeRO-3 — params fully sharded over EVERY mesh axis on their
+    widest dim, no TP dim; activations carry no model-axis collectives.
+    """
+    fsdp = _axes_of(mesh, ("pod", "data"))
+    model = _axes_of(mesh, ("model",))
+    model = model[0] if model else None
+    last = path.rsplit("/", 1)[-1]
+
+    if last in _REPLICATED or not shape or int(np.prod(shape)) < 65536:
+        return P()
+    if mode == "serve":
+        # Serving layout: shard ONLY non-contraction (output) dims, over as
+        # many axes as divide.  Weights arrive pre-sharded where the matmul
+        # needs them: no per-layer weight all-gathers (the train-layout FSDP
+        # contraction dims cost a full weight gather per layer per token
+        # step — measured 107 GiB/device on nemotron decode_32k); the only
+        # collectives left are [B,1,D]-sized activation reduce-scatters.
+        # MoE expert weights keep the EP layout (shard_map contract).
+        all_axes = _axes_of(mesh, ("pod", "data", "model"))
+        dm = _axes_of(mesh, ("data", "model"))
+        if "moe/wi" in path or "moe/wo" in path:
+            lead = len(shape) - 3
+            return P(*([None] * lead), _maybe(shape[-3], mesh, model),
+                     None, None)
+        if last in _POS:
+            return P(*([None] * (len(shape) - 2)),
+                     _maybe(shape[-2], mesh, all_axes), None)
+        if last == "embed":
+            return P(_maybe(shape[0], mesh, all_axes), None)
+        if len(shape) >= 2:
+            lead = len(shape) - 2
+            d_out = shape[-1]
+            for axes in (all_axes, dm, fsdp, (model,) if model else ()):
+                if axes and _fits(d_out, mesh, axes):
+                    return P(*([None] * lead), None, axes)
+            return P()
+        return P(_maybe(shape[0], mesh, all_axes))
+    if mode == "dp":
+        all_axes = _axes_of(mesh, ("pod", "data", "model"))
+        if last in _POS:
+            return P(*([None] * (len(shape) - 2)),
+                     _maybe(shape[-2], mesh, all_axes), None)
+        # shard the widest trailing dim over everything; fall back smaller
+        lead = len(shape) - 2 if len(shape) >= 2 else 0
+        d0 = shape[lead] if len(shape) >= 2 else shape[0]
+        for axes in (all_axes, _axes_of(mesh, ("data", "model")), fsdp):
+            if axes and _fits(d0, mesh, axes):
+                if len(shape) >= 2:
+                    return P(*([None] * lead), axes, None)
+                return P(axes)
+        return P()
+    if last in _POS:
+        # learned positional tables: shard rows over model when divisible
+        return P(*([None] * (len(shape) - 2)),
+                 _maybe(shape[-2], mesh, model), None)
+
+    # how many leading stack dims (scan axes) to skip: match trailing dims
+    if last == "embed":
+        return P(_maybe(shape[0], mesh, model), _maybe(shape[1], mesh, fsdp))
+    if last == "unembed":
+        return P(_maybe(shape[0], mesh, fsdp), _maybe(shape[1], mesh, model))
+
+    if "moe/wi" in path or "moe/wo" in path:
+        # [L, E, D, F'] / [L, E, F, D]: EP over model, fsdp on the wide dim
+        lead = len(shape) - 3
+        e, d0, d1 = shape[-3:]
+        spec = [None] * lead + [
+            _maybe(e, mesh, model),
+            _maybe(d0, mesh, fsdp),
+            None,
+        ]
+        return P(*spec)
+    if last == "router":
+        lead = len(shape) - 2
+        return P(*([None] * lead),
+                 _maybe(shape[-2], mesh, fsdp), None)
+    if last == "conv_w":
+        lead = len(shape) - 2
+        return P(*([None] * lead), None, _maybe(shape[-1], mesh, model))
+    if last == "r":
+        # sLSTM recurrent [.., H, hd, 4hd]: REPLICATED — it is consumed once
+        # per timestep inside a 4096-step lax.scan; any sharding here turns
+        # into one collective per timestep (measured: ~1e12 B/step).  The
+        # table is small (<=100 MB), replication is the right trade.
+        return P()
+
+    if len(shape) >= 2:
+        lead = len(shape) - 2
+        d_in, d_out = shape[-2:]
+        if last in _REVERSED:
+            return P(*([None] * lead),
+                     _maybe(d_in, mesh, model), _maybe(d_out, mesh, fsdp))
+        return P(*([None] * lead),
+                 _maybe(d_in, mesh, fsdp), _maybe(d_out, mesh, model))
+    return P()
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return _axes_of(mesh, ("pod", "data"))
+
+
+def tree_param_specs(params_shape: PyTree, mesh: Mesh,
+                     mode: str = "tp") -> PyTree:
+    """Specs for a pytree of params (or matching optimizer state)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        p = "/".join(str(k) for k in keys)
+        specs.append(param_spec(p, tuple(leaf.shape), mesh, mode))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(params_shape: PyTree, mesh: Mesh,
+                   mode: str = "tp") -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_param_specs(params_shape, mesh, mode))
+
+
+def cache_spec_sharding(cache_shape: PyTree, mesh: Mesh,
+                        batch: int) -> PyTree:
+    """Decode caches: batch axis over (pod, data); the (large) seq axis of
+    attention KV caches additionally over "model" (nemotron's kv=8 heads
+    cannot shard 16 ways, the 32k seq axis always can).
+
+    Attention caches are [stack..., B, S, KV, hd]; SSM/conv states are
+    [stack..., B, ...] and shard on batch only.  The batch dim is located as
+    the first dim equal to ``batch``.
+    """
+    b_axes = batch_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+
+    def spec(leaf):
+        shp = tuple(leaf.shape)
+        s = [None] * len(shp)
+        try:
+            b_idx = shp.index(batch)
+        except ValueError:
+            return NamedSharding(mesh, P())
+        s[b_idx] = _maybe(batch, mesh, b_axes)
+        # [B, S, KV, hd] caches and [B, S, KV] scale arrays: shard the big
+        # seq axis over "model" as well
+        is_kv = len(shp) - b_idx in (3, 4) and shp[b_idx + 1] >= 4096
+        if is_kv and model and shp[b_idx + 1] % mesh.shape[model] == 0:
+            s[b_idx + 1] = model
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree.map(spec, cache_shape)

@@ -1,0 +1,126 @@
+"""Train / serve step factories.
+
+``make_train_step`` builds the pjit-able update:
+  * gradient accumulation over microbatches (lax.scan) — one deferred
+    all-reduce worth of gradient traffic per step, overlapping microbatch
+    compute with the FSDP gathers of the next layer (XLA latency hiding);
+  * optional int8 gradient compression with error feedback (optim.grad_comp);
+  * AdamW update with configurable state dtype.
+
+``make_prefill_step`` / ``make_decode_step`` build the serving steps; both
+accept float or kneaded (quantized) parameter trees — the Tetris serving
+path substitutes QuantizedTensor / PackedInt4 leaves and everything below
+dispatches through ``matmul_any``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import LanguageModel
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig, AdamWState
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatch: int = 0            # 0 => single batch, no accumulation
+    grad_compression: str = "none"  # none | int8_ef (see optim.grad_comp)
+    grad_dtype: str = "float32"
+
+
+def _cast_floats(tree, dtype, shardings=None):
+    def one(x, sh=None):
+        if not (hasattr(x, "dtype") and jnp.issubdtype(x.dtype,
+                                                       jnp.floating)):
+            return x
+        y = x.astype(dtype)
+        # Pin the cast output's SHARDING: sharding propagation otherwise
+        # marks the convert replicated (from the consuming dot), which
+        # moves the FSDP all-gather above the convert — i.e. the gather
+        # moves f32 master weights (measured 2x collective traffic).
+        if sh is not None:
+            y = jax.lax.with_sharding_constraint(y, sh)
+        return y
+    if shardings is None:
+        return jax.tree.map(one, tree)
+    return jax.tree.map(one, tree, shardings)
+
+
+def make_train_step(model: LanguageModel, ts: TrainStepConfig,
+                    param_shardings: Optional[Any] = None):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        # Cast the WHOLE param tree to bf16 once, before the layer scan.
+        # With f32 masters entering the scan, every FSDP all-gather and
+        # every TP partial-sum all-reduce moves f32 (measured: the top-10
+        # collectives on llama3 train were all f32) — casting here makes
+        # the per-layer collectives bf16 (2x traffic cut) and turns the
+        # f32 conversion into one elementwise op per step.  Gradients
+        # arrive as bf16 cotangents and convert to f32 exactly once at
+        # this cast's transpose.
+        return model.loss(
+            _cast_floats(params, jnp.bfloat16, param_shardings), batch)
+
+    def train_step(params, opt_state: AdamWState, batch, ef_state=None):
+        """batch: dict of [B_global, ...] arrays.  Returns
+        (params, opt_state, ef_state, metrics)."""
+        mb = ts.microbatch
+        b = batch["tokens"].shape[0]
+        gdt = jnp.dtype(ts.grad_dtype)
+        if mb and mb < b:
+            assert b % mb == 0, (b, mb)
+            n = b // mb
+            split = jax.tree.map(
+                lambda x: x.reshape((n, mb) + x.shape[1:]), batch)
+
+            def acc_body(carry, micro):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, micro)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(gdt) / n, g_acc, g)
+                return (g_acc, l_acc + l / n), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), split)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        if ts.grad_compression == "int8_ef":
+            from repro.optim import grad_comp
+            grads, ef_state = grad_comp.compress_decompress(grads, ef_state)
+
+        params, opt_state, metrics = adamw.update(
+            grads, opt_state, params, ts.optimizer)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, ef_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: LanguageModel):
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+    return eval_step
+
+
+def make_prefill_step(model: LanguageModel):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: LanguageModel):
+    def decode_step(params, token, pos, cache):
+        return model.decode_step(params, token, pos, cache)
+    return decode_step

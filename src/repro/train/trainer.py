@@ -1,0 +1,107 @@
+"""The resilient training driver: data -> step -> checkpoint -> restart.
+
+Wires together the substrate: SyntheticTokens (stateless data),
+make_train_step (pjit'd update), AsyncCheckpointer (durable state),
+fault_tolerance (restart + straggler watermarks).  Used by
+examples/train_smollm.py and the integration tests; the same loop is what
+launch.train runs on a real cluster (per-host data slices via
+``host_batch``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models.lm import LanguageModel
+from repro.optim import adamw
+from repro.runtime import fault_tolerance as ft
+from repro.train.step import TrainStepConfig, make_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+    log_every: int = 10
+    restart: ft.RestartPolicy = dataclasses.field(
+        default_factory=ft.RestartPolicy)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 ts: Optional[TrainStepConfig] = None,
+                 global_batch: int = 8, seq_len: int = 128,
+                 injector: Optional[ft.FailureInjector] = None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.model = LanguageModel(cfg)
+        self.ts = ts or TrainStepConfig()
+        self.data = SyntheticTokens(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq_len,
+            global_batch=global_batch, seed=tcfg.seed))
+        self.step_fn = jax.jit(make_train_step(self.model, self.ts),
+                               donate_argnums=(0, 1))
+        self.ckpt = ckpt.AsyncCheckpointer(tcfg.ckpt_dir)
+        self.timer = ft.StepTimer()
+        self.injector = injector
+        self.metrics_log: Dict[int, Dict[str, float]] = {}
+        self.restarts = 0
+
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.params = self.model.init(key)
+        self.opt_state = adamw.init(self.params, self.ts.optimizer)
+        self.ef_state = None
+        self._step = 0
+
+    # ------------------------------------------------------------- plumbing
+    def _save(self, step: int, block: bool = False):
+        self.ckpt.save(step, {"params": self.params,
+                              "opt": self.opt_state}, block=block)
+
+    def _restore(self) -> int:
+        self.ckpt.wait()
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return 0
+        like = {"params": self.params, "opt": self.opt_state}
+        tree = ckpt.restore(self.tcfg.ckpt_dir, last, like)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self._step = last
+        return last
+
+    # ----------------------------------------------------------------- run
+    def _one_step(self, step: int):
+        self.timer.start()
+        if self.injector is not None:
+            self.injector.maybe_fail(step)
+        batch = self.data.global_batch(step)
+        self.params, self.opt_state, self.ef_state, metrics = self.step_fn(
+            self.params, self.opt_state, batch, self.ef_state)
+        dt = self.timer.stop(step)
+        if step % self.tcfg.log_every == 0 or step == self.tcfg.num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step_time_s"] = dt
+            self.metrics_log[step] = m
+        if step and step % self.tcfg.ckpt_every == 0:
+            self._save(step)
+        self._step = step + 1
+
+    def run(self) -> Dict[int, Dict[str, float]]:
+        start = self._restore() if ckpt.latest_step(
+            self.tcfg.ckpt_dir) is not None else 0
+        self.restarts = ft.run_resilient_loop(
+            start_step=start, num_steps=self.tcfg.num_steps,
+            step_fn=self._one_step, restore_fn=self._restore,
+            policy=self.tcfg.restart)
+        self._save(self.tcfg.num_steps - 1, block=True)
+        return self.metrics_log

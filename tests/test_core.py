@@ -1,0 +1,171 @@
+"""Core library tests: quantization, bit planes, kneading, SAC, cost model.
+
+Property tests (hypothesis) pin the system invariants:
+  * quantize/dequantize error bound  <= scale/2 per element
+  * bit-plane decomposition is exact (int arithmetic)
+  * knead -> unknead is bit-exact with dequantize(quantize(w))
+  * SAC matmul == dense matmul on quantized weights (all impls)
+  * kneaded cycles <= KS (never slower than DaDN) and >= essential rows
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    bitplanes, cost_model, knead, kneaded_cycles, kneading_ratio,
+    quantize, dequantize, sac_matmul, sac_matmul_planes, unknead,
+    weight_bit_stats,
+)
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def _rand(key, shape, scale=0.05):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------- quantize
+@given(bits=st.integers(2, 16), seed=st.integers(0, 50))
+def test_quantize_error_bound(bits, seed):
+    w = _rand(seed, (64, 32))
+    qt = quantize(w, bits=bits)
+    err = jnp.abs(dequantize(qt) - w)
+    bound = qt.scale / 2 + 1e-7
+    assert bool(jnp.all(err <= jnp.broadcast_to(bound, err.shape)))
+
+
+def test_quantize_zero_channel():
+    w = jnp.zeros((32, 4))
+    qt = quantize(w, bits=8)
+    assert bool(jnp.all(qt.q == 0))
+    assert bool(jnp.all(jnp.isfinite(qt.scale)))
+
+
+# --------------------------------------------------------------- bitplanes
+@given(bits=st.integers(2, 16), seed=st.integers(0, 50))
+def test_bitplane_roundtrip(bits, seed):
+    qmax = 2 ** (bits - 1) - 1
+    q = jax.random.randint(jax.random.PRNGKey(seed), (37, 11), -qmax,
+                           qmax + 1).astype(jnp.int32)
+    planes = bitplanes.to_signed_planes(q, bits)
+    assert bool(jnp.array_equal(bitplanes.from_signed_planes(planes), q))
+
+
+@given(seed=st.integers(0, 50))
+def test_pack_unpack_roundtrip(seed):
+    bits01 = jax.random.bernoulli(
+        jax.random.PRNGKey(seed), 0.4, (96, 17)).astype(jnp.uint8)
+    packed = bitplanes.pack_bits(bits01, axis=0)
+    assert packed.shape == (3, 17)
+    assert bool(jnp.array_equal(bitplanes.unpack_bits(packed, axis=0), bits01))
+
+
+def test_occupancy_exact():
+    planes = jnp.zeros((3, 64, 8), jnp.int8).at[1, 5, 2].set(1)
+    occ = bitplanes.plane_tile_occupancy(planes, 32, 8)
+    assert occ.shape == (3, 2, 1)
+    assert int(occ.sum()) == 1 and int(occ[1, 0, 0]) == 1
+
+
+# ---------------------------------------------------------------- kneading
+@given(bits=st.sampled_from([4, 8, 16]), seed=st.integers(0, 30))
+def test_knead_unknead_exact(bits, seed):
+    w = _rand(seed, (128, 128))
+    qt = quantize(w, bits=bits)
+    kw = knead(w, bits=bits, ks=32, n_block=128, qt=qt)
+    assert bool(jnp.array_equal(unknead(kw), dequantize(qt)))
+
+
+@given(ks=st.sampled_from([8, 16, 32]), seed=st.integers(0, 30))
+def test_kneaded_cycles_bounds(ks, seed):
+    w = _rand(seed, (128, 16))
+    qt = quantize(w, bits=16)
+    cyc = kneaded_cycles(qt.q, 16, ks)
+    assert cyc.shape == (128 // ks, 16)
+    assert bool(jnp.all(cyc <= ks))          # never slower than DaDN
+    assert bool(jnp.all(cyc >= 0))
+    ratio = kneading_ratio(qt.q, 16, ks)
+    assert 0.0 <= float(ratio) <= 1.0
+
+
+def test_kneading_zero_weights_free():
+    """All-zero weights take zero cycles — the paper's zero-value claim."""
+    q = jnp.zeros((64, 4), jnp.int16)
+    assert int(jnp.sum(kneaded_cycles(q, 16, 16))) == 0
+
+
+def test_kneading_fig3_example():
+    """Paper Fig 3: the kneaded cycle count is the tallest bit column."""
+    # 6 weights, 4-bit magnitudes: columns of the magnitude planes
+    q = jnp.array([[0b0101, 0b0010, 0b0001, 0b1000, 0b0011, 0b0000]],
+                  jnp.int16).T   # [6, 1]
+    cyc = kneaded_cycles(q, bits=5, ks=6)
+    # bit0: w0,w2,w4 -> 3;  bit1: w1,w4 -> 2;  bit2: w0 -> 1;  bit3: w3 -> 1
+    assert int(cyc[0, 0]) == 3
+
+
+# --------------------------------------------------------------------- SAC
+@given(bits=st.sampled_from([4, 8, 16]), seed=st.integers(0, 20),
+       m=st.sampled_from([1, 3, 8]))
+def test_sac_matmul_all_impls_agree(bits, seed, m):
+    w = _rand(seed, (128, 128))
+    a = _rand(seed + 100, (m, 128), scale=1.0)
+    qt = quantize(w, bits=bits)
+    kw = knead(w, bits=bits, ks=32, qt=qt)
+    ref = a @ dequantize(qt)
+    for impl in ("planes", "int"):
+        out = sac_matmul(a, kw, impl=impl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_sac_planes_is_shift_add():
+    """The plane decomposition really is sum_b 2^b (A @ S_b)."""
+    w = _rand(3, (64, 32))
+    a = _rand(4, (2, 64), scale=1.0)
+    qt = quantize(w, bits=8)
+    kw = knead(w, bits=8, ks=32, n_block=32, qt=qt)
+    out = sac_matmul_planes(a, kw)
+    ref = a @ dequantize(qt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------- cost model
+def test_cost_model_tetris_faster_than_dadn():
+    w = _rand(7, (256, 64))
+    acts = jnp.abs(_rand(8, (256, 16), scale=1.0))
+    qw = quantize(w, bits=16)
+    qa = quantize(acts, bits=16)
+    cb = cost_model.model_layer(qw.q, qa.q, bits=16, ks=16)
+    sp = cb.speedup()
+    assert sp["tetris"] > 1.0            # kneading always wins on slack
+    assert cb.tetris <= cb.dadn
+
+
+def test_cost_model_int8_doubles_throughput():
+    w = _rand(9, (256, 64))
+    acts = jnp.abs(_rand(10, (256, 16), scale=1.0))
+    q16, q8 = quantize(w, bits=16), quantize(w, bits=8)
+    qa = quantize(acts, bits=16)
+    c16 = cost_model.model_layer(q16.q, qa.q, bits=16, ks=16, mode="fp16")
+    c8 = cost_model.model_layer(q8.q, qa.q, bits=8, ks=16, mode="int8")
+    assert c8.tetris < c16.tetris        # int8 mode is strictly faster
+
+
+def test_edp_power_ratios():
+    assert cost_model.edp(10.0, "pra") / cost_model.edp(10.0, "dadn") \
+        == pytest.approx(3.37)
+
+
+# ------------------------------------------------------------------- stats
+def test_weight_bit_stats_ranges():
+    s = weight_bit_stats(_rand(11, (512, 64)), bits=16)
+    assert 0.0 <= s.zero_value_frac <= 1.0
+    assert 0.3 <= s.zero_bit_frac <= 0.9      # gaussian weights ~50-60%
+    assert s.per_bit_density.shape == (15,)
+    # Fig 2 cliff: top magnitude bits are nearly empty
+    assert s.per_bit_density[-1] < 0.2

@@ -1,0 +1,109 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+Every Pallas kernel runs in interpret mode (CPU container; TPU is the
+target) and must match its ref.py to f32-matmul tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import knead, quantize
+from repro.kernels.kneaded_gemm.ops import kneaded_gemm
+from repro.kernels.kneaded_gemm.ref import kneaded_gemm_ref, pack_int4, unpack_int4
+from repro.kernels.sac_matmul.ops import sac_matmul_pallas
+from repro.kernels.sac_matmul.ref import sac_matmul_ref
+
+
+def _wa(seed, m, k, n, dtype=jnp.float32):
+    kk = jax.random.split(jax.random.PRNGKey(seed), 2)
+    w = jax.random.normal(kk[0], (k, n)) * 0.04
+    a = jax.random.normal(kk[1], (m, k)).astype(dtype)
+    return w, a
+
+
+SHAPES = [
+    (1, 256, 128),      # gemv-like (decode)
+    (8, 256, 256),
+    (16, 512, 128),
+    (128, 512, 256),    # multi-tile M
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("bits", [4, 8, 9, 16])   # incl. odd width (paper §III.3)
+def test_sac_kernel_shapes_bits(m, k, n, bits):
+    w, a = _wa(bits * 100 + m, m, k, n)
+    kw = knead(w, bits=bits, ks=256, n_block=128)
+    ref = sac_matmul_ref(a, kw)
+    out = sac_matmul_pallas(a, kw, bm=min(128, max(8, m)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("adtype", [jnp.float32, jnp.bfloat16])
+def test_sac_kernel_activation_dtypes(adtype):
+    w, a = _wa(7, 8, 256, 128, dtype=adtype)
+    kw = knead(w, bits=8, ks=256, n_block=128)
+    ref = sac_matmul_ref(a.astype(jnp.float32), kw)
+    out = sac_matmul_pallas(a, kw, bm=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_sac_kernel_occupancy_skipping_exact():
+    """Zeroed high planes must not change the result (skipped, not wrong).
+
+    The second K-block is ~100x smaller than the first; with per-channel
+    scales set by the large block, its codes have empty high planes -> its
+    (plane, K-tile) occupancy entries go to zero and the kernel skips them.
+    """
+    w, a = _wa(9, 8, 512, 128)
+    w = w.at[256:].multiply(0.01)
+    kw = knead(w, bits=16, ks=256, n_block=128)
+    occ = np.asarray(kw.occupancy)
+    assert occ.sum() < occ.size       # some tiles actually skip
+    out = sac_matmul_pallas(a, kw, bm=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(sac_matmul_ref(a, kw)),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_kneaded_gemm_int8(m, k, n):
+    w, a = _wa(m + k, m, k, n)
+    qt = quantize(w, bits=8)
+    scale = qt.scale.reshape(1, -1)
+    ref = kneaded_gemm_ref(a, qt.q, scale)
+    out = kneaded_gemm(a, qt.q, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_kneaded_gemm_int4_packed(m, k, n):
+    w, a = _wa(m + k + 1, m, k, n)
+    qt = quantize(w, bits=4)
+    packed = pack_int4(qt.q)
+    assert packed.shape == (k // 2, n)
+    scale = qt.scale.reshape(1, -1)
+    ref = kneaded_gemm_ref(a, packed, scale, packed4=True)
+    out = kneaded_gemm(a, packed, scale, packed4=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_int4_pack_roundtrip():
+    q = jnp.arange(-8, 8, dtype=jnp.int8).reshape(16, 1)
+    q = jnp.tile(q, (2, 3))
+    assert bool(jnp.array_equal(unpack_int4(pack_int4(q)), q))
+
+
+def test_kernel_bytes_reduction():
+    """The kneaded format's HBM footprint: bits/16 of bf16 + metadata."""
+    w, _ = _wa(3, 1, 1024, 256)
+    kw8 = knead(w, bits=8, ks=256)
+    kw16 = knead(w, bits=16, ks=256)
+    dense = kw8.dense_bf16_bytes()
+    assert kw8.packed_bytes() < 0.75 * dense
+    assert kw16.packed_bytes() < 1.5 * dense
+    assert kw8.packed_bytes() < kw16.packed_bytes()

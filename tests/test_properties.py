@@ -1,0 +1,136 @@
+"""Deeper property-based tests on the paper's invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplanes, knead, kneaded_cycles, quantize, sac_matmul
+from repro.core.kneading import kneading_ratio
+from repro.models import layers
+
+settings.register_profile("ci2", deadline=None, max_examples=15)
+settings.load_profile("ci2")
+
+
+def _w(seed, shape, scale=0.05):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+# ----------------------------------------------------------------- kneading
+@given(seed=st.integers(0, 20))
+def test_kneading_ratio_monotone_in_ks(seed):
+    """Fig 11's shape: more weights kneaded => fewer cycles per weight.
+
+    max of sums grows sublinearly: E[max_b count_b(2K)] <= 2 E[max_b count_b(K)],
+    so T_ks/T0 is (weakly) decreasing in KS on any weight distribution."""
+    q = quantize(_w(seed, (192, 8)), bits=16, axis=None).q
+    ratios = [float(kneading_ratio(q, 16, ks)) for ks in (8, 16, 32, 64)]
+    for a, b in zip(ratios, ratios[1:]):
+        assert b <= a + 1e-6
+
+
+@given(seed=st.integers(0, 20), ks=st.sampled_from([8, 16]))
+def test_kneaded_cycles_permutation_invariant_within_group(seed, ks):
+    """Kneading counts bit columns — the order of weights inside a group
+    cannot matter (the splitter references any activation in the KS range)."""
+    q = quantize(_w(seed, (ks, 4)), bits=16, axis=None).q
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), ks)
+    assert bool(jnp.array_equal(kneaded_cycles(q, 16, ks),
+                                kneaded_cycles(q[perm], 16, ks)))
+
+
+@given(seed=st.integers(0, 20))
+def test_kneaded_cycles_subadditive_merge(seed):
+    """Merging two groups can only help (or tie): the 2K-group cycle count
+    is at most the sum of the two K-group counts."""
+    q = quantize(_w(seed, (64, 4)), bits=16, axis=None).q
+    c32 = kneaded_cycles(q, 16, 32)              # [2, 4]
+    c64 = kneaded_cycles(q, 16, 64)              # [1, 4]
+    assert bool(jnp.all(c64[0] <= c32[0] + c32[1]))
+
+
+# ---------------------------------------------------------------- bit planes
+@given(seed=st.integers(0, 30), bits=st.sampled_from([4, 8, 16]))
+def test_plane_popcount_identity(seed, bits):
+    """sum_b P_b == popcount(|q|): the planes carry exactly the essential
+    bits the paper counts."""
+    qmax = 2 ** (bits - 1) - 1
+    q = jax.random.randint(jax.random.PRNGKey(seed), (63, 5), -qmax,
+                           qmax + 1)
+    planes = bitplanes.magnitude_planes(q, bits)
+    assert bool(jnp.array_equal(
+        jnp.sum(planes.astype(jnp.int32), axis=0),
+        bitplanes.popcount(jnp.abs(q))))
+
+
+@given(seed=st.integers(0, 20))
+def test_occupancy_zero_iff_tile_empty(seed):
+    planes = (jax.random.uniform(jax.random.PRNGKey(seed), (4, 64, 16))
+              < 0.02).astype(jnp.int8)
+    occ = bitplanes.plane_tile_occupancy(planes, 32, 8)
+    t = planes.reshape(4, 2, 32, 2, 8)
+    for b in range(4):
+        for i in range(2):
+            for j in range(2):
+                empty = int(jnp.sum(t[b, i, :, j, :])) == 0
+                assert bool(occ[b, i, j] == 0) == empty
+
+
+# ----------------------------------------------------------------------- SAC
+@given(seed=st.integers(0, 15))
+def test_sac_matmul_linear_in_activations(seed):
+    """SAC is exactly linear in A (Eq. 2 regroups a bilinear form)."""
+    kw = knead(_w(seed, (128, 128)), bits=8, ks=32)
+    a1 = _w(seed + 1, (4, 128), 1.0)
+    a2 = _w(seed + 2, (4, 128), 1.0)
+    lhs = sac_matmul(a1 + a2, kw, impl="int")
+    rhs = sac_matmul(a1, kw, impl="int") + sac_matmul(a2, kw, impl="int")
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=2e-4)
+
+
+@given(seed=st.integers(0, 15), bits=st.sampled_from([4, 8]))
+def test_quantize_idempotent(seed, bits):
+    w = _w(seed, (64, 8))
+    q1 = quantize(w, bits=bits)
+    w2 = q1.q * q1.scale
+    q2 = quantize(w2, bits=bits, scale=q1.scale)
+    assert bool(jnp.array_equal(q1.q, q2.q))
+
+
+# ------------------------------------------------------------------ attention
+@given(shift=st.integers(0, 64))
+def test_rope_relative_position_property(shift):
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    def dot_at(i, j):
+        qr = layers.apply_rope(q, jnp.array([[i]]), 1e4)
+        kr = layers.apply_rope(k, jnp.array([[j]]), 1e4)
+        return float(jnp.sum(qr[0, 0, 0, 0] * kr[0, 0, 0]))
+    assert abs(dot_at(5, 3) - dot_at(5 + shift, 3 + shift)) < 1e-3
+
+
+@given(seed=st.integers(0, 10))
+def test_attention_rows_convex_combination(seed):
+    """Attention outputs lie in the convex hull of V rows: componentwise
+    min(V) <= out <= max(V) for each kv head."""
+    q = _w(seed, (1, 16, 1, 2, 8), 1.0)
+    k = _w(seed + 1, (1, 16, 1, 8), 1.0)
+    v = _w(seed + 2, (1, 16, 1, 8), 1.0)
+    out = layers.full_attention(q, k, v, causal=False).astype(jnp.float32)
+    lo = jnp.min(v, axis=1)[:, None, :, None, :] - 1e-4
+    hi = jnp.max(v, axis=1)[:, None, :, None, :] + 1e-4
+    assert bool(jnp.all(out >= lo)) and bool(jnp.all(out <= hi))
+
+
+@given(seed=st.integers(0, 8), chunk=st.sampled_from([16, 32, 64]))
+def test_flash_chunk_size_invariance(seed, chunk):
+    """The blockwise decomposition is exact for every chunk size."""
+    q = _w(seed, (1, 128, 1, 2, 16), 1.0)
+    k = _w(seed + 1, (1, 128, 1, 16), 1.0)
+    v = _w(seed + 2, (1, 128, 1, 16), 1.0)
+    ref = layers.full_attention(q, k, v, causal=True)
+    out = layers.flash_attention(q, k, v, True, chunk, 0)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=1e-5)
