@@ -3,9 +3,14 @@
 Wall-times here are interpret-mode (CPU container) — meaningful only as
 correctness-path cost; the TPU-relevant derived metrics are the HBM byte
 ratios and the plane/tile skip fractions (what the roofline consumes).
+
+``--quick`` shrinks shapes/bit sweeps to CI-smoke size; ``--json PATH``
+additionally writes the rows as JSON (the per-PR perf artifact).
 """
 from __future__ import annotations
 
+import argparse
+import json
 from typing import List
 
 import jax
@@ -20,14 +25,14 @@ from repro.kernels.sac_matmul.ops import sac_matmul_pallas
 from repro.kernels.sac_matmul.ref import sac_matmul_ref
 
 
-def run() -> List[Row]:
+def run(quick: bool = False) -> List[Row]:
     rows: List[Row] = []
     key = jax.random.PRNGKey(0)
-    m, k, n = 8, 1024, 512
+    m, k, n = (8, 256, 128) if quick else (8, 1024, 512)
     w = jax.random.normal(key, (k, n)) * 0.02
     a = jax.random.normal(jax.random.PRNGKey(1), (m, k))
 
-    for bits in (4, 8, 16):
+    for bits in (4, 8) if quick else (4, 8, 16):
         kw = knead(w, bits=bits, ks=256, n_block=128)
         us, out = timed(lambda: sac_matmul_pallas(a, kw, bm=8), repeats=1)
         ref = sac_matmul_ref(a, kw)
@@ -62,6 +67,22 @@ def run() -> List[Row]:
     return rows
 
 
-if __name__ == "__main__":
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true",
+                        help="CI smoke mode: small shapes, fewer bit widths")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="also write rows as JSON to PATH")
+    args = parser.parse_args()
+    rows = run(quick=args.quick)
     from benchmarks.common import print_rows
-    print_rows(run())
+    print_rows(rows)
+    if args.json:
+        payload = [{"name": name, "us_per_call": us, "derived": derived}
+                   for name, us, derived in rows]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

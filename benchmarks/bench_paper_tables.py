@@ -1,10 +1,14 @@
 """Paper-reproduction benchmarks: Table 1, Fig 2, Fig 8, Fig 9, Fig 10,
 Fig 11, Table 2 — one function per artifact, all driven by real quantized
 weights/activations of the paper's own CNN family (+ one modern LM for
-context) through the cycle-accurate DaDN/PRA/Tetris cost model.
+context) through the cycle-accurate DaDN/PRA/Tetris cost model — plus the
+``kneaded_e2e`` section, which runs the *real* kneaded execution path (SAC
+matmuls on KneadedWeight, including the Pallas kernel) and reports per-layer
+kneaded cycle ratios next to measured wall clock.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List
 
@@ -12,9 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, cnn_layer_data, timed
-from repro.core import cost_model, quantize, stats as wstats
-from repro.core.kneading import kneading_ratio
+from benchmarks.common import Row, cnn_layer_data, cnn_weights, timed
+from repro.core import cost_model, quantize, sac_matmul, stats as wstats
+from repro.core.kneading import knead_padded, kneading_ratio
 
 CNNS = ("alexnet", "vgg16", "nin")
 
@@ -221,10 +225,77 @@ def bench_table2() -> List[Row]:
     return rows
 
 
+def bench_kneaded_e2e() -> List[Row]:
+    """The real execution path behind Figs 8/10/11: per-layer kneaded cycle
+    ratios (the model) side by side with measured wall clock of the SAC
+    matmul on the layer's real activations (the execution), for AlexNet.
+
+    Wall clocks are CPU numbers — the "int" path is the XLA integer-code
+    matmul, the "pallas" row runs the occupancy-skipping kernel in interpret
+    mode (a correctness-path cost, not a TPU projection).
+    """
+    from repro.inference.cnn_engine import CNNServingConfig, CNNServingEngine
+    from repro.models import cnn
+
+    rows: List[Row] = []
+    name = "alexnet"
+    cfg = cnn.CNN_ZOO[name]
+    params = cnn_weights(name)
+    weights, acts = cnn_layer_data(name)
+
+    # per-layer: cycle model ratio (hardware ks=16) vs measured wall clock
+    for lname, w in weights.items():
+        act = jnp.asarray(acts[lname][:1024])
+        w = jnp.asarray(w)
+        q = quantize(w, bits=8, axis=None).q
+        k16 = (q.shape[0] // 16) * 16
+        ratio = float(kneading_ratio(q[:k16], 8, 16))
+        kw = knead_padded(w, bits=8, ks=256)
+        us_float, _ = timed(jax.jit(lambda a, w=w: a @ w), act)
+        us_sac, _ = timed(jax.jit(lambda a, kw=kw: sac_matmul(a, kw,
+                                                              impl="int")),
+                          act)
+        rows.append((
+            f"kneaded_e2e/{name}/{lname}", us_sac,
+            f"cycle_ratio={100*ratio:.1f}% wall_float={us_float:.0f}us "
+            f"wall_sac_int={us_sac:.0f}us shape={tuple(w.shape)}"))
+
+    # end-to-end: the serving engine, float vs fully-kneaded forward
+    x = jax.random.normal(jax.random.PRNGKey(5),
+                          (4, cfg.image_size, cfg.image_size, 3))
+    eng_f = CNNServingEngine(cfg, params, CNNServingConfig(impl="float"))
+    eng_i = CNNServingEngine(cfg, params, CNNServingConfig(impl="int"))
+    us_f, ref = timed(eng_f.logits, x)
+    us_i, out = timed(eng_i.logits, x)
+    agree = float(jnp.mean((jnp.argmax(out, -1) == jnp.argmax(ref, -1))
+                           .astype(jnp.float32)))
+    rows.append((f"kneaded_e2e/{name}/forward_int8", us_i,
+                 f"wall_float={us_f:.0f}us wall_kneaded={us_i:.0f}us "
+                 f"top1_agreement={100*agree:.0f}% "
+                 f"serving_bytes_ratio="
+                 f"{eng_i.serving_bytes() / max(1, eng_f.serving_bytes()):.3f}"))
+
+    # the Pallas kernel end to end (interpret mode): small config, one pass
+    small = dataclasses.replace(cfg, image_size=16)
+    sparams = cnn.init(jax.random.PRNGKey(0), small)
+    xs = jax.random.normal(jax.random.PRNGKey(6), (2, 16, 16, 3))
+    eng_g = CNNServingEngine(small, sparams,
+                             CNNServingConfig(impl="pallas", jit=False))
+    eng_p = CNNServingEngine(small, sparams,
+                             CNNServingConfig(impl="planes", jit=False))
+    us_g, lg = timed(eng_g.logits, xs, repeats=1)
+    _, lp = timed(eng_p.logits, xs, repeats=1)
+    exact = bool(np.array_equal(np.asarray(lg), np.asarray(lp)))
+    rows.append((f"kneaded_e2e/{name}16/forward_pallas", us_g,
+                 f"interpret_wall={us_g/1e6:.2f}s "
+                 f"bit_exact_vs_planes={exact}"))
+    return rows
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
     for fn in (bench_table1, bench_fig2, bench_fig8, bench_fig9,
-               bench_fig10, bench_fig11, bench_table2):
+               bench_fig10, bench_fig11, bench_table2, bench_kneaded_e2e):
         rows.extend(fn())
     return rows
 

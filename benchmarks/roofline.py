@@ -20,7 +20,7 @@ import json
 import pathlib
 from typing import Dict, List, Optional
 
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.mesh import PEAK_FLOPS_BF16
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts"
 DRY = ART / "dryrun"

@@ -1,15 +1,18 @@
 """The paper's own domain end to end: a kneaded VGG-16 classifier.
 
-Trains VGG-16 briefly, converts EVERY conv/fc layer to the kneaded
-bit-plane format (the Tetris deployment artifact), runs inference through
-the SAC path — one layer through the actual Pallas kernel — and reports:
+Trains VGG-16 briefly, hands the float checkpoint to ``CNNServingEngine``,
+which converts EVERY conv/fc layer to the kneaded bit-plane format (the
+Tetris deployment artifact) and runs the whole forward pass through SAC —
+then demonstrates the Pallas kernel path end to end on an AlexNet-16 and
+reports:
 
   * classification agreement between float and kneaded inference,
-  * the per-layer kneaded HBM footprint vs bf16,
-  * the modeled per-layer Tetris speedup (paper Fig 9).
+  * the per-layer kneaded HBM footprint vs bf16 + kneaded cycle ratio,
+  * bit-exactness of the Pallas kernel against the planes oracle.
 
 Run:  PYTHONPATH=src python examples/cnn_kneaded.py
 """
+import dataclasses
 import pathlib
 import sys
 
@@ -18,57 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
-from benchmarks.common import cnn_layer_data, cnn_weights
-from repro.core import cost_model, knead, quantize, sac_matmul
-from repro.kernels.sac_matmul.ops import sac_matmul_pallas
+from benchmarks.common import cnn_weights
+from repro.inference.cnn_engine import CNNServingConfig, CNNServingEngine
 from repro.models import cnn
-
-
-def _pad_to(x, mult, axis):
-    pad = (-x.shape[axis]) % mult
-    if not pad:
-        return x
-    pads = [(0, 0)] * x.ndim
-    pads[axis] = (0, pad)
-    return jnp.pad(x, pads)
-
-
-def kneaded_apply(params, x, cfg, bits=8, pallas_layer=None):
-    """CNN forward with every matmul routed through SAC on kneaded weights."""
-    flat = False
-    for i, item in enumerate(cfg.spec):
-        kind = item[0]
-        if kind == "conv":
-            _, out_c, k, stride = item
-            patches = cnn._im2col(x, k, stride)
-            p = params[f"conv{i}"]
-            w = _pad_to(_pad_to(p["w"], 256, 0), 128, 1)
-            kw = knead(w, bits=bits, ks=256)
-            a2 = _pad_to(patches.reshape(-1, patches.shape[-1]), 256, 1)
-            if pallas_layer == f"conv{i}":
-                y = sac_matmul_pallas(a2, kw, bm=128)
-            else:
-                y = sac_matmul(a2, kw, impl="int")
-            y = y[:, :p["w"].shape[1]].reshape(
-                patches.shape[:-1] + (p["w"].shape[1],))
-            x = jax.nn.relu(y + p["b"])
-        elif kind == "pool":
-            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                      (1, item[1], item[1], 1),
-                                      (1, item[1], item[1], 1), "VALID")
-        elif kind == "fc":
-            if not flat:
-                x = x.reshape(x.shape[0], -1)
-                flat = True
-            p = params[f"fc{i}"]
-            w = _pad_to(_pad_to(p["w"], 256, 0), 128, 1)
-            kw = knead(w, bits=bits, ks=256)
-            y = sac_matmul(_pad_to(x, 256, 1), kw,
-                           impl="int")[:, :p["w"].shape[1]]
-            x = y + p["b"]
-            if i != len(cfg.spec) - 1:
-                x = jax.nn.relu(x)
-    return x
 
 
 def main():
@@ -77,24 +32,34 @@ def main():
     x = jax.random.normal(jax.random.PRNGKey(7),
                           (8, cfg.image_size, cfg.image_size, 3))
 
-    ref = cnn.apply(params, x, cfg)
-    out = kneaded_apply(params, x, cfg, bits=8, pallas_layer="conv3")
-    agree = float(jnp.mean((jnp.argmax(out, -1) == jnp.argmax(ref, -1))
-                           .astype(jnp.float32)))
+    float_eng = CNNServingEngine(cfg, params, CNNServingConfig(impl="float"))
+    kneaded_eng = CNNServingEngine(cfg, params,
+                                   CNNServingConfig(impl="int", bits=8))
+    ref = float_eng.classify(x)
+    pred = kneaded_eng.classify(x)
+    agree = float(jnp.mean((pred == ref).astype(jnp.float32)))
+    ratio = kneaded_eng.serving_bytes() / max(1, float_eng.serving_bytes())
     print(f"kneaded-int8 VGG-16: top-1 agreement with float = {100*agree:.0f}%"
-          f"  (conv3 ran through the Pallas SAC kernel)")
+          f"  (serving bytes = {ratio:.3f}x of bf16)")
 
-    weights, acts = cnn_layer_data("vgg16")
-    print(f"\n{'layer':>8} {'K x N':>14} {'kneaded/bf16':>13} {'tetris x':>9}")
-    for name, w in list(weights.items())[:8]:
-        w2 = _pad_to(_pad_to(jnp.asarray(w), 256, 0), 128, 1)
-        kw = knead(w2, bits=8, ks=256)
-        ratio = kw.packed_bytes() / kw.dense_bf16_bytes()
-        qw = quantize(jnp.asarray(w), bits=16, axis=None)
-        qa = quantize(jnp.abs(acts[name][:2048]), bits=16, axis=None)
-        c = cost_model.model_layer(qw.q, qa.q, bits=16, ks=16)
-        print(f"{name:>8} {str(tuple(w.shape)):>14} {ratio:13.3f} "
-              f"{c.dadn/c.tetris:9.2f}")
+    print(f"\n{'layer':>8} {'K x N':>14} {'kneaded/bf16':>13} {'cycles%':>8}")
+    for row in kneaded_eng.layer_report(cycle_ks=16)[:8]:
+        print(f"{row['layer']:>8} {str(row['shape']):>14} "
+              f"{row['bytes_vs_bf16']:13.3f} {100*row['cycle_ratio']:8.1f}")
+
+    # The Pallas kernel path, end to end (interpret mode on CPU): every
+    # layer of an AlexNet-16 through the occupancy-skipping SAC kernel,
+    # bit-exact against the paper-faithful planes decomposition.
+    small = dataclasses.replace(cnn.CNN_ZOO["alexnet"], image_size=16)
+    sparams = cnn.init(jax.random.PRNGKey(0), small)
+    xs = jax.random.normal(jax.random.PRNGKey(8), (2, 16, 16, 3))
+    lg = CNNServingEngine(small, sparams,
+                          CNNServingConfig(impl="pallas", jit=False)).logits(xs)
+    lp = CNNServingEngine(small, sparams,
+                          CNNServingConfig(impl="planes", jit=False)).logits(xs)
+    exact = bool(np.array_equal(np.asarray(lg), np.asarray(lp)))
+    print(f"\nalexnet-16 fully through the Pallas SAC kernel: "
+          f"bit-exact vs planes oracle = {exact}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,6 @@ Run:  PYTHONPATH=src python examples/kneading_analysis.py
 import pathlib
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -7,7 +7,7 @@ config runnable on one CPU).  ``repro.configs.registry`` maps ids to both.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 __all__ = ["ModelConfig", "InputShape", "LM_SHAPES", "shape_by_name"]
 

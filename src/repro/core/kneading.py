@@ -21,7 +21,8 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import math
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,9 @@ from repro.core.quantization import QuantizedTensor, quantize
 __all__ = [
     "KneadedWeight",
     "knead",
+    "knead_padded",
+    "kneadable_dims",
+    "kneaded_codes",
     "unknead",
     "kneaded_cycles",
     "kneading_ratio",
@@ -86,7 +90,11 @@ class KneadedWeight:
       bits:      static fixed-point width B.
       ks:        static kneading stride == kernel K-tile extent.
       n_block:   static kernel N-tile extent for occupancy granularity.
-      k, n:      static logical dims.
+      k, n:      static *stored* (tile-aligned) dims.
+      k_orig, n_orig: static logical dims before alignment padding (0 means
+                 "same as stored" — the un-padded case).  Padding rows/cols
+                 are all-zero codes whose occupancy is 0, so the kernel skips
+                 them for free and the padded matmul is exact.
     """
 
     planes: jax.Array
@@ -98,10 +106,22 @@ class KneadedWeight:
     n_block: int = dataclasses.field(metadata=dict(static=True), default=128)
     k: int = dataclasses.field(metadata=dict(static=True), default=0)
     n: int = dataclasses.field(metadata=dict(static=True), default=0)
+    k_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
 
     @property
     def shape(self):
         return (self.k, self.n)
+
+    @property
+    def logical_k(self) -> int:
+        """Reduction dim of the original weight (before alignment padding)."""
+        return self.k_orig or self.k
+
+    @property
+    def logical_n(self) -> int:
+        """Output dim of the original weight (before alignment padding)."""
+        return self.n_orig or self.n
 
     def packed_bytes(self) -> int:
         """HBM bytes of the kneaded format (planes + signs + scale + occ)."""
@@ -116,6 +136,15 @@ class KneadedWeight:
         return self.k * self.n * 2
 
 
+def kneadable_dims(k: int, n: int, ks: int = 256,
+                   n_block: int = 128) -> Tuple[int, int]:
+    """Smallest (K', N') >= (k, n) meeting the kneaded-format alignment:
+    K' a multiple of lcm(32, ks) (bit-packing word AND kernel K tile),
+    N' a multiple of n_block (kernel N tile)."""
+    k_align = math.lcm(32, ks)
+    return (-(-k // k_align) * k_align, -(-n // n_block) * n_block)
+
+
 def knead(
     w: jax.Array,
     bits: int = 8,
@@ -127,7 +156,8 @@ def knead(
     """Quantize (unless ``qt`` given) and knead a [K, N] weight matrix.
 
     K must be a multiple of lcm(32, ks); N a multiple of n_block.  Model dims
-    in this framework are multiples of 128, so this holds by construction.
+    in this framework are multiples of 128, so this holds by construction;
+    for arbitrary dims (conv im2col matrices) use :func:`knead_padded`.
     """
     if qt is None:
         qt = quantize(w, bits=bits, axis=-1)
@@ -135,7 +165,7 @@ def knead(
     if q.ndim != 2:
         raise ValueError(f"knead expects [K, N], got {q.shape}")
     k, n = q.shape
-    if k % max(32, ks) or n % n_block:
+    if (k, n) != kneadable_dims(k, n, ks, n_block):
         raise ValueError(f"shape {q.shape} incompatible with ks={ks}, n_block={n_block}")
     mag = bitplanes.magnitude_planes(q, qt.bits)                # [B-1, K, N]
     planes = bitplanes.pack_bits(mag, axis=1)                   # [B-1, K/32, N]
@@ -148,10 +178,43 @@ def knead(
     )
 
 
-def unknead(kw: KneadedWeight) -> jax.Array:
-    """Exact float reconstruction: equals dequantize(quantize(w)) of knead()."""
+def knead_padded(
+    w: jax.Array,
+    bits: int = 8,
+    ks: int = 256,
+    n_block: int = 128,
+) -> KneadedWeight:
+    """Knead an arbitrarily-shaped [K, N] matrix by zero-padding to alignment.
+
+    The conv path's im2col matrices have K = C*kh*kw (27, 576, 4800, ...),
+    rarely a multiple of lcm(32, ks).  Zero padding is exact: padded rows
+    multiply activations that are themselves zero-padded, padded output
+    channels get scale 1.0 / codes 0 and are sliced off.  Both directions
+    produce all-zero planes (occupancy 0) — the kernel skips them, so the
+    padding costs metadata only, no MXU passes.  ``logical_k``/``logical_n``
+    record the original dims for the dispatch layer.
+    """
+    if w.ndim != 2:
+        raise ValueError(f"knead_padded expects [K, N], got {w.shape}")
+    k0, n0 = w.shape
+    kp, np_ = kneadable_dims(k0, n0, ks, n_block)
+    if (kp, np_) != (k0, n0):
+        w = jnp.pad(w, ((0, kp - k0), (0, np_ - n0)))
+    kw = knead(w, bits=bits, ks=ks, n_block=n_block)
+    if (kp, np_) == (k0, n0):
+        return kw
+    return dataclasses.replace(kw, k_orig=k0, n_orig=n0)
+
+
+def kneaded_codes(kw: KneadedWeight) -> jax.Array:
+    """Signed integer codes [K, N] reconstructed from the packed planes."""
     mag = bitplanes.unpack_bits(kw.planes, axis=1).astype(jnp.int32)  # [B-1,K,N]
     weights = (2 ** jnp.arange(kw.bits - 1, dtype=jnp.int32)).reshape(-1, 1, 1)
     absq = jnp.sum(mag * weights, axis=0)                             # [K, N]
     sign = 1 - 2 * bitplanes.unpack_bits(kw.signs, axis=0).astype(jnp.int32)
-    return (absq * sign).astype(jnp.float32) * kw.scale
+    return absq * sign
+
+
+def unknead(kw: KneadedWeight) -> jax.Array:
+    """Exact float reconstruction: equals dequantize(quantize(w)) of knead()."""
+    return kneaded_codes(kw).astype(jnp.float32) * kw.scale

@@ -28,25 +28,34 @@ import jax.numpy as jnp
 
 from repro.core import bitplanes
 from repro.core.kneading import KneadedWeight, knead
-from repro.core.quantization import QuantizedTensor
 
-__all__ = ["sac_matmul", "sac_matmul_planes", "sac_matmul_int", "TetrisLinear"]
+__all__ = ["SAC_IMPLS", "sac_matmul", "sac_matmul_planes", "sac_matmul_int",
+           "TetrisLinear"]
 
 
 def sac_matmul_planes(a: jax.Array, kw: KneadedWeight) -> jax.Array:
     """Paper-faithful SAC: per-plane matmuls + single rear shift-and-add.
 
-    Segment accumulators S_b = A @ signed_plane_b; output = scale * sum 2^b S_b.
-    Planes whose occupancy is empty everywhere are genuinely skipped by the
-    Pallas kernel; here (oracle) we compute all planes.
+    Segment accumulators S_b accumulate A_t @ signed_plane_b_t over K tiles of
+    extent ``ks`` *in the same order as the Pallas kernel's grid* (K innermost,
+    one partial dot per tile, sequential f32 adds into the segment).  Output =
+    scale * sum_b 2^b S_b.  Matching the kernel's accumulation structure makes
+    this oracle bit-exact against the kernel in interpret mode — the parity
+    tests assert equality, not closeness.  Planes whose occupancy is empty are
+    genuinely skipped by the kernel; here we add their (exactly zero) partials.
     """
     mag = bitplanes.unpack_bits(kw.planes, axis=1)                 # [B-1, K, N]
     sign = 1 - 2 * bitplanes.unpack_bits(kw.signs, axis=0).astype(jnp.int8)
     a32 = a.astype(jnp.float32)
+    nk = kw.k // kw.ks
     segments = []
     for b in range(kw.bits - 1):                                   # static loop
         plane = (mag[b].astype(jnp.int8) * sign).astype(jnp.float32)
-        segments.append(a32 @ plane)                               # S_b
+        s = jnp.zeros((a32.shape[0], kw.n), jnp.float32)
+        for t in range(nk):                                        # K tiles
+            sl = slice(t * kw.ks, (t + 1) * kw.ks)
+            s = s + a32[:, sl] @ plane[sl]                         # S_b += ...
+        segments.append(s)
     seg = jnp.stack(segments)                                      # [B-1, M, N]
     weights = (2.0 ** jnp.arange(kw.bits - 1)).reshape(-1, 1, 1)
     out = jnp.sum(seg * weights, axis=0)                           # rear adder
@@ -64,17 +73,36 @@ def sac_matmul_int(a: jax.Array, q: jax.Array, scale: jax.Array) -> jax.Array:
     return out * scale
 
 
+SAC_IMPLS = ("float", "int", "planes", "pallas")
+
+
 def sac_matmul(
     a: jax.Array,
     kw: KneadedWeight,
-    impl: Literal["planes", "int", "pallas"] = "int",
+    impl: Literal["float", "planes", "int", "pallas"] = "int",
 ) -> jax.Array:
-    """SAC matmul of activations [..., K] against a kneaded weight [K, N]."""
+    """SAC matmul of activations [..., K] against a kneaded weight [K, N].
+
+    Accepts activations sized to either the stored (padded) or the logical
+    reduction dim: logical inputs are zero-padded up to ``kw.k`` and the
+    output is sliced back to ``kw.logical_n`` — exact, since padded rows/
+    channels are all-zero codes.
+
+    impl="float" dequantizes the codes and runs one f32 matmul — the
+    quantized-model reference the SAC paths must match (identical math to
+    "int"; kept so the model-level dispatch matrix is closed under this op).
+    """
     lead = a.shape[:-1]
     a2 = a.reshape(-1, a.shape[-1])
+    if a2.shape[1] != kw.k:
+        if a2.shape[1] != kw.logical_k:
+            raise ValueError(
+                f"activation K {a2.shape[1]} matches neither stored "
+                f"{kw.k} nor logical {kw.logical_k}")
+        a2 = jnp.pad(a2, ((0, 0), (0, kw.k - a2.shape[1])))
     if impl == "planes":
         out = sac_matmul_planes(a2, kw)
-    elif impl == "int":
+    elif impl in ("int", "float"):
         from repro.core.kneading import unknead  # codes * scale, exact
         out = a2.astype(jnp.float32) @ unknead(kw)
     elif impl == "pallas":
@@ -82,7 +110,8 @@ def sac_matmul(
         out = sac_matmul_pallas(a2, kw)
     else:
         raise ValueError(f"unknown impl {impl!r}")
-    return out.reshape(lead + (kw.n,)).astype(a.dtype)
+    out = out[:, :kw.logical_n]
+    return out.reshape(lead + (kw.logical_n,)).astype(a.dtype)
 
 
 class TetrisLinear:
@@ -98,5 +127,6 @@ class TetrisLinear:
 
     @staticmethod
     def apply(params: KneadedWeight, x: jax.Array,
-              impl: Literal["planes", "int", "pallas"] = "int") -> jax.Array:
+              impl: Literal["float", "planes", "int", "pallas"] = "int",
+              ) -> jax.Array:
         return sac_matmul(x, params, impl=impl)

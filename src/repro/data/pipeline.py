@@ -12,7 +12,7 @@ example training curves actually descend (examples/train_smollm.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

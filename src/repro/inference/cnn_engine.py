@@ -1,0 +1,122 @@
+"""CNN serving engine — the paper's own workload, served fully kneaded.
+
+``CNNServingEngine`` is the CNN sibling of the LM ``ServingEngine``: it takes
+a trained float checkpoint of an AlexNet/VGG-16/NiN-style model, converts
+every conv/fc layer to the kneaded bit-plane format (conv layers via their
+im2col [C*kh*kw, out_ch] matrices, zero-padded to tile alignment), and runs
+the whole forward pass through the selected SAC execution path:
+
+  impl="float"   — original float weights, plain f32 matmuls (the baseline)
+  impl="int"     — integer-code matmul, scale in the epilogue (production CPU)
+  impl="planes"  — paper-faithful per-plane SAC (the kernel's semantic oracle)
+  impl="pallas"  — the occupancy-skipping Pallas kernel (interpret on CPU,
+                   compiled on TPU), conv activations streamed in slabs
+
+"planes" and "pallas" are bit-exact against each other; all kneaded paths
+match the float model within the quantization error bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kneading import KneadedWeight, kneading_ratio
+from repro.core.quantization import quantize
+from repro.core.sac import SAC_IMPLS
+from repro.models import cnn
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNServingConfig:
+    impl: str = "int"          # "float" | "int" | "planes" | "pallas"
+    bits: int = 8              # kneaded fixed-point width
+    ks: int = 256              # kneading stride == kernel K tile
+    n_block: int = 128         # kernel N tile (occupancy granularity)
+    conv_m_tile: int = 2048    # activation-row slab for the pallas conv path
+    jit: bool = True
+    # Retain the float checkpoint after kneading so layer_report() can
+    # derive cycle statistics cheaply.  Set False for long-lived serving
+    # processes that only need the forward pass — the kneaded params alone
+    # then realize the advertised ~bits/16 memory footprint in-process.
+    keep_float_params: bool = True
+
+
+class CNNServingEngine:
+    """Classify images through a fully-kneaded CNN forward pass."""
+
+    def __init__(self, cfg: cnn.CNNConfig, params: PyTree,
+                 scfg: CNNServingConfig = CNNServingConfig()):
+        if scfg.impl not in SAC_IMPLS:
+            raise ValueError(f"impl must be one of {SAC_IMPLS}, "
+                             f"got {scfg.impl!r}")
+        self.cfg, self.scfg = cfg, scfg
+        if scfg.impl == "float":
+            self.params = params
+            self.float_params = params
+        else:
+            self.params = cnn.knead_params(params, bits=scfg.bits,
+                                           ks=scfg.ks, n_block=scfg.n_block)
+            self.float_params = params if scfg.keep_float_params else None
+
+        def fwd(p, x):
+            return cnn.apply(p, x, cfg, impl=scfg.impl,
+                             conv_m_tile=scfg.conv_m_tile)
+
+        self._fwd = jax.jit(fwd) if scfg.jit else fwd
+
+    def logits(self, x: jax.Array) -> jax.Array:
+        """x [B, H, W, C] -> logits [B, num_classes]."""
+        return self._fwd(self.params, x)
+
+    def classify(self, x: jax.Array) -> jax.Array:
+        """x [B, H, W, C] -> predicted class ids [B] int32."""
+        return jnp.argmax(self.logits(x), axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------------------- reporting
+
+    def serving_bytes(self) -> int:
+        """HBM bytes of the serving params (kneaded packed or bf16 floats)."""
+        total = 0
+        for leaf in jax.tree.leaves(self.params,
+                                    is_leaf=lambda x: isinstance(
+                                        x, KneadedWeight)):
+            if isinstance(leaf, KneadedWeight):
+                total += leaf.packed_bytes()
+            else:
+                total += leaf.size * 2          # floats serve as bf16
+        return total
+
+    def layer_report(self, cycle_ks: int = 16) -> List[Dict[str, Any]]:
+        """Per-layer kneaded footprint + cycle stats (Fig 9/11 companions).
+
+        ``cycle_ks`` is the *hardware* kneading stride of the cycle model
+        (the paper sweeps 10..32) — independent of the storage-format stride
+        ``scfg.ks`` that sizes the kernel's K tiles.  Codes come from
+        re-quantizing the retained float checkpoint (identical to the
+        kneaded codes on the logical region, without unpacking the
+        [B-1, K, N] bit planes of every layer just to count them).
+        """
+        if self.scfg.impl == "float":
+            raise ValueError("layer_report needs kneaded params "
+                             "(impl != 'float')")
+        if self.float_params is None:
+            raise ValueError("layer_report needs the float checkpoint; "
+                             "construct with keep_float_params=True")
+        rows = []
+        for name, p in self.params.items():
+            kw = p["w"]
+            q = quantize(self.float_params[name]["w"], bits=kw.bits,
+                         axis=-1).q
+            k = (q.shape[0] // cycle_ks) * cycle_ks
+            rows.append({
+                "layer": name,
+                "shape": (kw.logical_k, kw.logical_n),
+                "bytes_vs_bf16": kw.packed_bytes() / kw.dense_bf16_bytes(),
+                "cycle_ratio": float(kneading_ratio(q[:k], kw.bits, cycle_ks)),
+            })
+        return rows

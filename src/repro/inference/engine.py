@@ -9,7 +9,7 @@ matmul below runs as integer codes with a single epilogue scale (SAC).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,12 +1,19 @@
-"""Jitted public wrapper for the SAC bit-plane Pallas kernel.
+"""Jitted public wrappers for the SAC bit-plane Pallas kernel.
 
-Handles padding/tiling policy and backend dispatch: compiled Pallas on TPU,
-``interpret=True`` elsewhere (this container is CPU-only; interpret mode
-executes the kernel body faithfully for validation).
+``sac_matmul_pallas``: the raw [M, K] x kneaded [K, N] op — padding/tiling
+policy and backend dispatch (compiled Pallas on TPU, ``interpret=True``
+elsewhere; this container is CPU-only and interpret mode executes the kernel
+body faithfully for validation).
+
+``sac_conv2d``: the batched convolution entry point — im2col + occupancy-
+skipping SAC matmul behind one op, with the activation rows streamed through
+the kernel in bounded slabs so VGG-16-sized [B*H'*W', K] patch matrices never
+materialize a single huge kernel launch.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,3 +62,69 @@ def sac_matmul_pallas(
         interpret=interpret,
     )
     return out[:m] if pad else out
+
+
+def im2col(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """x [B, H, W, C] -> patches [B, H', W', C*k*k] ('SAME' padding).
+
+    The single source of truth for the conv lowering — the float path in
+    ``models/cnn.py`` imports this same function, so float and kneaded
+    convolutions see identical patch layouts by construction.
+    """
+    return jax.lax.conv_general_dilated_patches(
+        x, (k, k), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def sac_conv2d(
+    x: jax.Array,
+    kw: KneadedWeight,
+    *,
+    ksize: int,
+    stride: int = 1,
+    bias: Optional[jax.Array] = None,
+    impl: str = "pallas",
+    m_tile: int = 2048,
+    bm: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """2-D convolution as im2col + SAC matmul against a kneaded filter.
+
+    The filter is the kneaded form of the [C*kh*kw, out_ch] im2col weight
+    matrix (use ``knead_padded`` — C*k*k is rarely tile-aligned).  For
+    ``impl="pallas"`` the [B*H'*W', K] activation rows are streamed through
+    the kernel in slabs of ``m_tile`` rows: each slab is one pallas_call, so
+    peak VMEM-side footprint is bounded by the slab, not the image.  Other
+    impls ("planes"/"int"/"float") take the pure-jnp SAC paths — same math,
+    used as oracles and fast CPU fallbacks.
+
+    Returns [B, H', W', out_ch] f32 (+ bias if given).
+    """
+    patches = im2col(x, ksize, stride)                  # [B, H', W', C*k*k]
+    lead = patches.shape[:-1]
+    a = patches.reshape(-1, patches.shape[-1])
+    k0 = a.shape[1]
+    if k0 not in (kw.k, kw.logical_k):
+        raise ValueError(f"patch K {k0} does not match kneaded weight "
+                         f"(stored {kw.k}, logical {kw.logical_k})")
+    if impl != "pallas":
+        from repro.core.sac import sac_matmul
+        out = sac_matmul(a.astype(jnp.float32), kw, impl=impl)
+    else:
+        if k0 != kw.k:
+            a = jnp.pad(a, ((0, 0), (0, kw.k - k0)))
+        m = a.shape[0]
+        slabs = []
+        for s in range(0, m, m_tile):                   # activation-batch tiling
+            slab = a[s:min(s + m_tile, m)]
+            # bm passes through unchanged: sac_matmul_pallas clamps it to
+            # min(bm, max(8, m)) itself, keeping the sublane dim >= the f32
+            # (8, 128) tile floor even for a tiny remainder slab
+            slabs.append(sac_matmul_pallas(slab, kw, bm=bm,
+                                           interpret=interpret))
+        out = slabs[0] if len(slabs) == 1 else jnp.concatenate(slabs, axis=0)
+        out = out[:, :kw.logical_n]
+    out = out.reshape(lead + (kw.logical_n,)).astype(jnp.float32)
+    if bias is not None:
+        out = out + bias
+    return out

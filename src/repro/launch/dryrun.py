@@ -26,7 +26,7 @@ import traceback
 import jax
 
 from repro.configs.base import shape_by_name
-from repro.configs.registry import ARCH_IDS, all_cells, applicable_shapes, get_config
+from repro.configs.registry import ARCH_IDS, all_cells
 from repro.launch import mesh as mesh_lib
 from repro.launch.specs import build_cell
 from repro.runtime import hlo_analysis, pspec

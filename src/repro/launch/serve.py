@@ -24,7 +24,6 @@ def main():
     args = ap.parse_args()
 
     import jax
-    import jax.numpy as jnp
 
     from repro.checkpoint import checkpointer as ckpt
     from repro.configs.registry import get_config

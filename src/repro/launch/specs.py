@@ -13,7 +13,7 @@ roofline gain §Perf quantifies against the bf16 baseline.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

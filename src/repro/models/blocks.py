@@ -13,7 +13,6 @@ all experts local (smoke tests).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

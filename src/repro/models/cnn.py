@@ -4,17 +4,25 @@ Convolution is implemented as im2col -> matmul so every conv layer is a
 [K = C*kh*kw, N = out_ch] weight *matrix* — exactly the form weight kneading
 and SAC consume (the paper's accelerator likewise lowers conv to weight/
 activation lanes).  These models drive the paper-reproduction benchmarks
-(Table 1, Figs 2/8/9/10/11); the serving path can run them fully kneaded.
+(Table 1, Figs 2/8/9/10/11) and run fully kneaded on the serving path:
+``knead_params`` converts every conv/fc kernel to :class:`KneadedWeight`
+(conv via its im2col matrix, zero-padded to tile alignment) and ``apply``
+takes an ``impl`` selector ("float" | "int" | "planes" | "pallas") that
+routes every layer's matmul through the chosen SAC execution path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.kneading import KneadedWeight, knead_padded
+# the single conv-lowering definition, shared with sac_conv2d so float and
+# kneaded convolutions see identical patch layouts
+from repro.kernels.sac_matmul.ops import im2col as _im2col
 from repro.models import layers as L
 
 # spec entries: ("conv", out_ch, k, stride) | ("pool", k) | ("fc", out)
@@ -56,12 +64,6 @@ NIN = CNNConfig("nin", (
 CNN_ZOO = {c.name: c for c in (ALEXNET, VGG16, NIN)}
 
 
-def _im2col(x: jax.Array, k: int, stride: int) -> jax.Array:
-    """x [B, H, W, C] -> patches [B, H', W', C*k*k] ('SAME' padding)."""
-    patches = jax.lax.conv_general_dilated_patches(
-        x, (k, k), (stride, stride), "SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return patches
 
 
 def init(key, cfg: CNNConfig) -> Dict:
@@ -96,19 +98,36 @@ def init(key, cfg: CNNConfig) -> Dict:
 
 
 def apply(params: Dict, x: jax.Array, cfg: CNNConfig,
-          collect_activations: bool = False):
-    """x [B, H, W, C] -> logits [B, classes] (+ per-layer matmul inputs)."""
+          collect_activations: bool = False, impl: str = "float",
+          conv_m_tile: int = 2048):
+    """x [B, H, W, C] -> logits [B, classes] (+ per-layer matmul inputs).
+
+    ``impl`` selects the execution path for kneaded layers (see module
+    docstring); "float" runs plain f32 matmuls on float weights.  Kneaded
+    conv layers go through :func:`repro.kernels.sac_matmul.ops.sac_conv2d`
+    (im2col + SAC matmul in one op, activation rows streamed in
+    ``conv_m_tile`` slabs on the pallas path).
+    """
     acts: Dict[str, jax.Array] = {}
     flat = False
     for i, item in enumerate(cfg.spec):
         kind = item[0]
         if kind == "conv":
             _, out_c, k, stride = item
-            patches = _im2col(x, k, stride)
-            if collect_activations:
-                acts[f"conv{i}"] = patches.reshape(-1, patches.shape[-1])
             p = params[f"conv{i}"]
-            x = L.matmul_any(patches, p["w"], jnp.float32) + p["b"]
+            if isinstance(p["w"], KneadedWeight):
+                from repro.kernels.sac_matmul.ops import sac_conv2d
+                if collect_activations:
+                    patches = _im2col(x, k, stride)
+                    acts[f"conv{i}"] = patches.reshape(-1, patches.shape[-1])
+                x = sac_conv2d(x, p["w"], ksize=k, stride=stride, bias=p["b"],
+                               impl=impl, m_tile=conv_m_tile)
+            else:
+                patches = _im2col(x, k, stride)
+                if collect_activations:
+                    acts[f"conv{i}"] = patches.reshape(-1, patches.shape[-1])
+                x = L.matmul_any(patches, p["w"], jnp.float32,
+                                 impl=impl) + p["b"]
             x = jax.nn.relu(x)
         elif kind == "pool":
             k = item[1]
@@ -121,12 +140,29 @@ def apply(params: Dict, x: jax.Array, cfg: CNNConfig,
             if collect_activations:
                 acts[f"fc{i}"] = x
             p = params[f"fc{i}"]
-            x = L.matmul_any(x, p["w"], jnp.float32) + p["b"]
+            x = L.matmul_any(x, p["w"], jnp.float32, impl=impl) + p["b"]
             if i != len(cfg.spec) - 1:
                 x = jax.nn.relu(x)
     if x.ndim == 4:                 # NiN: global average pooling head
         x = jnp.mean(x, axis=(1, 2))
     return (x, acts) if collect_activations else x
+
+
+def knead_params(params: Dict, bits: int = 8, ks: int = 256,
+                 n_block: int = 128) -> Dict:
+    """Convert every conv/fc kernel of a float checkpoint to KneadedWeight.
+
+    Conv layers knead their im2col [C*kh*kw, out_ch] matrices; arbitrary
+    reduction dims are zero-padded to the lcm(32, ks) / n_block alignment
+    (exact — padding has occupancy 0 and is skipped by the kernel).  Biases
+    stay float: the paper kneads the weight stream only.
+    """
+    out: Dict = {}
+    for name, p in params.items():
+        out[name] = {"w": knead_padded(p["w"], bits=bits, ks=ks,
+                                       n_block=n_block),
+                     "b": p["b"]}
+    return out
 
 
 def weight_matrices(params: Dict) -> Dict[str, jax.Array]:

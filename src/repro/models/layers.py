@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,6 @@ import numpy as np
 
 from repro.core.kneading import KneadedWeight
 from repro.core.quantization import QuantizedTensor
-from repro.runtime.pspec import constrain
 
 # ---------------------------------------------------------------------------
 # Param init
@@ -49,16 +47,19 @@ class PackedInt4:
     k: int = dataclasses.field(metadata=dict(static=True), default=0)
 
 
-def matmul_any(x: jax.Array, w, compute_dtype=jnp.bfloat16) -> jax.Array:
+def matmul_any(x: jax.Array, w, compute_dtype=jnp.bfloat16,
+               impl: str = "int") -> jax.Array:
     """x @ w for float, QuantizedTensor (int8), KneadedWeight, or PackedInt4.
 
     Quantized paths follow SAC: integer-code contraction with the per-channel
     scale applied once in the epilogue (never dequantize weights up front in
-    a separate HBM-visible buffer).
+    a separate HBM-visible buffer).  ``impl`` selects the SAC execution path
+    for KneadedWeight leaves ("float"/"int"/"planes"/"pallas"); float leaves
+    ignore it.
     """
     if isinstance(w, KneadedWeight):
         from repro.core.sac import sac_matmul
-        return sac_matmul(x, w, impl="int").astype(compute_dtype)
+        return sac_matmul(x, w, impl=impl).astype(compute_dtype)
     if isinstance(w, QuantizedTensor):
         out = jnp.einsum("...k,kn->...n", x.astype(compute_dtype),
                          w.q.astype(compute_dtype),

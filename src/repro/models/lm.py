@@ -20,7 +20,6 @@ when ``cfg.remat``.  Cross-entropy is computed in sequence chunks so the
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -29,7 +28,6 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import blocks, layers, ssm
-from repro.runtime import pspec
 
 PyTree = object
 

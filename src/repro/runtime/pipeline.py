@@ -16,12 +16,10 @@ pp dry-run in EXPERIMENTS.md §Dry-run): DP/TP (FSDP+TP) remains the default.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 

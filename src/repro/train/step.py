@@ -15,13 +15,11 @@ dispatches through ``matmul_any``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.lm import LanguageModel
 from repro.optim import adamw
 from repro.optim.adamw import AdamWConfig, AdamWState

@@ -10,11 +10,9 @@ launch.train runs on a real cluster (per-host data slices via
 from __future__ import annotations
 
 import dataclasses
-import pathlib
 from typing import Any, Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import checkpointer as ckpt
 from repro.configs.base import ModelConfig

@@ -8,7 +8,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -78,7 +77,7 @@ def test_param_spec_rules():
 
 
 def test_param_spec_moe_and_embed():
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    mesh = jax.sharding.AbstractMesh((("data", 2), ("model", 2)))
     assert sharding.param_spec("layers/moe/wi", (4, 128, 512, 1024), mesh) \
         == P(None, "model", ("data",), None)
     assert sharding.param_spec("embed", (1024, 512), mesh) \
@@ -94,7 +93,7 @@ def test_param_spec_moe_and_embed():
 
 
 def test_cache_sharding_seq_over_model():
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    mesh = jax.sharding.AbstractMesh((("data", 2), ("model", 2)))
     cache = {"k": jax.ShapeDtypeStruct((8, 4, 8192, 2, 16), jnp.bfloat16),
              "k_scale": jax.ShapeDtypeStruct((8, 4, 8192, 2), jnp.float32),
              "ssm": jax.ShapeDtypeStruct((8, 4, 5, 7), jnp.float32)}

@@ -12,7 +12,6 @@ import pytest
 
 from repro.configs.registry import get_config
 from repro.inference.engine import ServingConfig, ServingEngine
-from repro.models import layers
 from repro.models.lm import LanguageModel
 
 

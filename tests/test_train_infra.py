@@ -1,13 +1,9 @@
 """Training-substrate tests: optimizer, data, checkpointing, fault
 tolerance, gradient compression, trainer end-to-end with restart."""
-import pathlib
-import shutil
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import checkpointer as ckpt
 from repro.configs.registry import get_config
