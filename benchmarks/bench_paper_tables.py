@@ -231,7 +231,7 @@ def bench_kneaded_e2e() -> List[Row]:
     matmul on the layer's real activations (the execution), for AlexNet.
 
     Wall clocks are CPU numbers — the "int" path is the XLA integer-code
-    matmul, the "pallas" row runs the occupancy-skipping kernel in interpret
+    matmul, the "pallas" row runs the schedule-compacted kernel in interpret
     mode (a correctness-path cost, not a TPU projection).
     """
     from repro.inference.cnn_engine import CNNServingConfig, CNNServingEngine

@@ -1,0 +1,92 @@
+"""CI perf gate: compare a bench_kernels JSON against the committed baseline.
+
+Gated metrics are the *deterministic* schedule/cycle quantities (committed
+trained weights + fixed seeds), not wall clocks: ``executed_tile_dots`` and
+``cycle_ratio`` are lower-is-better — a PR that makes the compacted schedule
+dispatch more MXU passes, or worsens the kneaded cycle ratio, by more than
+``--tolerance`` (default 10%) fails the build.  ``max_err`` is gated the
+same way so kernel-accuracy regressions can't hide behind perf numbers.
+
+Usage:
+  python -m benchmarks.check_regression CURRENT.json \\
+      [--baseline benchmarks/artifacts/bench_baseline.json] [--tolerance 0.10]
+
+Regenerate the baseline (after an *intended* change, commit the diff):
+  python -m benchmarks.bench_kernels --quick \\
+      --json benchmarks/artifacts/bench_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict
+
+BASELINE = pathlib.Path(__file__).resolve().parent / "artifacts" / \
+    "bench_baseline.json"
+
+# lower-is-better metrics the gate enforces (absolute counts and ratios —
+# all reproducible bit-for-bit from committed weights)
+GATED = ("executed_tile_dots", "cycle_ratio", "max_err")
+# max_err floor: don't flag 1e-6-scale float noise as a "regression"
+ABS_FLOOR = {"max_err": 1e-4}
+
+
+def _by_name(rows) -> Dict[str, dict]:
+    return {r["name"]: r.get("metrics", {}) for r in rows}
+
+
+def compare(current: Dict[str, dict], baseline: Dict[str, dict],
+            tolerance: float) -> list:
+    failures = []
+    for name, base_met in baseline.items():
+        gated = {k: v for k, v in base_met.items() if k in GATED}
+        if not gated:
+            continue
+        if name not in current:
+            failures.append(f"{name}: row missing from current bench output")
+            continue
+        cur_met = current[name]
+        for key, base_val in gated.items():
+            if key not in cur_met:
+                failures.append(f"{name}.{key}: metric missing")
+                continue
+            cur_val = float(cur_met[key])
+            limit = float(base_val) * (1.0 + tolerance) + \
+                ABS_FLOOR.get(key, 0.0)
+            if cur_val > limit:
+                failures.append(
+                    f"{name}.{key}: {cur_val:.6g} exceeds baseline "
+                    f"{float(base_val):.6g} by more than "
+                    f"{100 * tolerance:.0f}%")
+    return failures
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("current", help="bench_kernels --json output to check")
+    parser.add_argument("--baseline", default=str(BASELINE))
+    parser.add_argument("--tolerance", type=float, default=0.10)
+    args = parser.parse_args(argv)
+
+    with open(args.current) as f:
+        current = _by_name(json.load(f))
+    with open(args.baseline) as f:
+        baseline = _by_name(json.load(f))
+
+    failures = compare(current, baseline, args.tolerance)
+    if failures:
+        print("PERF REGRESSION vs committed baseline "
+              f"({args.baseline}):", file=sys.stderr)
+        for msg in failures:
+            print(f"  FAIL {msg}", file=sys.stderr)
+        return 1
+    n = sum(1 for met in baseline.values() if any(k in GATED for k in met))
+    print(f"perf gate OK: {n} baselined rows within "
+          f"{100 * args.tolerance:.0f}% of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

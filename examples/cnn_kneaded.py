@@ -48,7 +48,8 @@ def main():
               f"{row['bytes_vs_bf16']:13.3f} {100*row['cycle_ratio']:8.1f}")
 
     # The Pallas kernel path, end to end (interpret mode on CPU): every
-    # layer of an AlexNet-16 through the occupancy-skipping SAC kernel,
+    # layer of an AlexNet-16 through the schedule-compacted SAC kernel —
+    # one pallas_call per layer, dispatching only the occupied work items —
     # bit-exact against the paper-faithful planes decomposition.
     small = dataclasses.replace(cnn.CNN_ZOO["alexnet"], image_size=16)
     sparams = cnn.init(jax.random.PRNGKey(0), small)

@@ -14,6 +14,7 @@ from repro.core.quantization import (
 from repro.core.kneading import (
     KneadedWeight, knead, unknead, kneaded_cycles, kneading_ratio,
 )
+from repro.core.schedule import KneadedSchedule, build_schedule, replay_schedule
 from repro.core.sac import sac_matmul, sac_matmul_planes, sac_matmul_int, TetrisLinear
 from repro.core.stats import WeightBitStats, weight_bit_stats, aggregate_stats
 from repro.core import bitplanes, cost_model
@@ -21,6 +22,7 @@ from repro.core import bitplanes, cost_model
 __all__ = [
     "QuantizedTensor", "quantize", "dequantize", "fake_quantize", "storage_dtype",
     "KneadedWeight", "knead", "unknead", "kneaded_cycles", "kneading_ratio",
+    "KneadedSchedule", "build_schedule", "replay_schedule",
     "sac_matmul", "sac_matmul_planes", "sac_matmul_int", "TetrisLinear",
     "WeightBitStats", "weight_bit_stats", "aggregate_stats",
     "bitplanes", "cost_model",

@@ -37,6 +37,8 @@ __all__ = [
     "pack_bits",
     "unpack_bits",
     "plane_tile_occupancy",
+    "pack_presence",
+    "unpack_presence",
     "popcount",
 ]
 
@@ -128,3 +130,25 @@ def plane_tile_occupancy(
         b, k // k_block, k_block, n // n_block, n_block
     )
     return (jnp.sum(t, axis=(2, 4)) > 0).astype(jnp.int32)
+
+
+def pack_presence(presence: jax.Array) -> jax.Array:
+    """Bit-pack a {0,1} presence map along its K-tile axis.
+
+    Args:
+      presence: {0,1} [B, NK, NN] (e.g. :func:`plane_tile_occupancy` output).
+    Returns:
+      uint32 [B, ceil(NK/32), NN] — axis 1 zero-padded to a word multiple and
+      packed little-endian.  One *bit* per (plane, K-tile, N-tile) instead of
+      an int32 entry: the stored pass-mark metadata shrinks 32x.
+    """
+    b, nk, nn = presence.shape
+    pad = (-nk) % WORD
+    if pad:
+        presence = jnp.pad(presence, ((0, 0), (0, pad), (0, 0)))
+    return pack_bits((presence != 0).astype(jnp.uint8), axis=1)
+
+
+def unpack_presence(packed: jax.Array, nk: int) -> jax.Array:
+    """Inverse of :func:`pack_presence`: uint32 words -> int32 {0,1} [B, nk, NN]."""
+    return unpack_bits(packed, axis=1)[:, :nk].astype(jnp.int32)

@@ -14,9 +14,11 @@
 
 2. **TPU kneaded format** (:class:`KneadedWeight` / :func:`knead`): the
    deployable artifact — sign-magnitude bit planes, bit-packed 32/word along
-   K, with per-(plane, tile) occupancy metadata so the Pallas kernel skips
-   slack tiles and the storage footprint is ``bits/16`` of bf16.  Kneading is
-   *exact*: ``unknead(knead(w)) == dequantize(quantize(w))`` bit-for-bit.
+   K, with per-(plane, tile) occupancy presence bits compacted into a
+   :class:`~repro.core.schedule.KneadedSchedule` so the Pallas kernel
+   dispatches occupied tiles *only*, and the storage footprint is
+   ``bits/16`` of bf16.  Kneading is *exact*:
+   ``unknead(knead(w)) == dequantize(quantize(w))`` bit-for-bit.
 """
 from __future__ import annotations
 
@@ -29,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.core import bitplanes
 from repro.core.quantization import QuantizedTensor, quantize
+from repro.core.schedule import KneadedSchedule, build_schedule
 
 __all__ = [
     "KneadedWeight",
@@ -85,8 +88,12 @@ class KneadedWeight:
       planes:    uint32 [B-1, K/32, N] — magnitude planes, bit-packed along K.
       signs:     uint32 [K/32, N]      — sign bits (1 = negative), packed.
       scale:     f32 broadcastable to [1, N] — per-output-channel scale.
-      occupancy: int32 [B-1, K/ks, N/n_block] — per-(plane, tile) essential-bit
-                 presence (the pass-mark metadata consumed by the kernel).
+      occupancy: uint32 [B-1, ceil(K/ks/32), N/n_block] — per-(plane, tile)
+                 essential-bit presence, bit-packed along the K-tile axis
+                 (the pass-mark metadata; see :meth:`occupancy_map`).
+      schedule:  the occupancy map compacted into per-N-tile work lists of
+                 non-empty (plane, k_tile) items — what the kernel actually
+                 executes (scalar-prefetched; built once at knead time).
       bits:      static fixed-point width B.
       ks:        static kneading stride == kernel K-tile extent.
       n_block:   static kernel N-tile extent for occupancy granularity.
@@ -101,6 +108,7 @@ class KneadedWeight:
     signs: jax.Array
     scale: jax.Array
     occupancy: jax.Array
+    schedule: KneadedSchedule
     bits: int = dataclasses.field(metadata=dict(static=True), default=8)
     ks: int = dataclasses.field(metadata=dict(static=True), default=256)
     n_block: int = dataclasses.field(metadata=dict(static=True), default=128)
@@ -123,13 +131,35 @@ class KneadedWeight:
         """Output dim of the original weight (before alignment padding)."""
         return self.n_orig or self.n
 
+    def occupancy_map(self) -> jax.Array:
+        """Unpacked presence map, int32 {0,1} [B-1, K/ks, N/n_block]."""
+        return bitplanes.unpack_presence(self.occupancy, self.k // self.ks)
+
+    def with_occupancy(self, occupancy_map: jax.Array) -> "KneadedWeight":
+        """Replace the occupancy map, re-deriving packed bits + schedule.
+
+        The kernel executes the *schedule*, so tampering with occupancy (as
+        the skip-semantics tests do) must go through here to take effect.
+        """
+        return dataclasses.replace(
+            self,
+            occupancy=bitplanes.pack_presence(occupancy_map),
+            schedule=build_schedule(occupancy_map),
+        )
+
+    def metadata_bytes(self) -> int:
+        """Pass-mark metadata footprint: packed presence bits + the
+        compacted schedule arrays the kernel prefetches."""
+        return self.occupancy.size * 4 + self.schedule.metadata_bytes()
+
     def packed_bytes(self) -> int:
-        """HBM bytes of the kneaded format (planes + signs + scale + occ)."""
+        """True HBM bytes of the kneaded format: packed planes + signs +
+        scale + the full metadata footprint (:meth:`metadata_bytes`)."""
         return (
             self.planes.size * 4
             + self.signs.size * 4
             + self.scale.size * 4
-            + self.occupancy.size * 4
+            + self.metadata_bytes()
         )
 
     def dense_bf16_bytes(self) -> int:
@@ -170,11 +200,13 @@ def knead(
     mag = bitplanes.magnitude_planes(q, qt.bits)                # [B-1, K, N]
     planes = bitplanes.pack_bits(mag, axis=1)                   # [B-1, K/32, N]
     signs = bitplanes.pack_bits((q < 0).astype(jnp.uint8), axis=0)
-    occ = bitplanes.plane_tile_occupancy(mag, ks, n_block)
+    occ_map = bitplanes.plane_tile_occupancy(mag, ks, n_block)
     scale = qt.scale.reshape(1, -1) if qt.scale.ndim else qt.scale
     return KneadedWeight(
         planes=planes, signs=signs, scale=scale.astype(jnp.float32),
-        occupancy=occ, bits=qt.bits, ks=ks, n_block=n_block, k=k, n=n,
+        occupancy=bitplanes.pack_presence(occ_map),
+        schedule=build_schedule(occ_map),
+        bits=qt.bits, ks=ks, n_block=n_block, k=k, n=n,
     )
 
 
@@ -190,9 +222,10 @@ def knead_padded(
     rarely a multiple of lcm(32, ks).  Zero padding is exact: padded rows
     multiply activations that are themselves zero-padded, padded output
     channels get scale 1.0 / codes 0 and are sliced off.  Both directions
-    produce all-zero planes (occupancy 0) — the kernel skips them, so the
-    padding costs metadata only, no MXU passes.  ``logical_k``/``logical_n``
-    record the original dims for the dispatch layer.
+    produce all-zero planes (occupancy 0) that the schedule never
+    dispatches, so the padding costs metadata only, no MXU passes.
+    ``logical_k``/``logical_n`` record the original dims for the dispatch
+    layer.
     """
     if w.ndim != 2:
         raise ValueError(f"knead_padded expects [K, N], got {w.shape}")

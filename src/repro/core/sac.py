@@ -11,7 +11,8 @@ implementations, all numerically identical on quantized weights:
 * ``impl="planes"`` — the paper-faithful decomposition: one MXU pass per
   non-empty bit plane, per-plane segment accumulators, single 2^b reduction.
   (Pure jnp; the Pallas kernel in ``repro.kernels.sac_matmul`` is the tiled
-  TPU version with occupancy skipping — this is its semantic oracle.)
+  TPU version driven by the compacted occupancy schedule — this is its
+  semantic oracle and replays the schedule's accumulation order.)
 * ``impl="int"``    — the production path: one integer-code matmul with the
   scale applied once in the epilogue (SAC's "defer all shifting/scaling to
   the rear" applied at tile granularity).  Same math, MXU-optimal.
@@ -36,26 +37,29 @@ __all__ = ["SAC_IMPLS", "sac_matmul", "sac_matmul_planes", "sac_matmul_int",
 def sac_matmul_planes(a: jax.Array, kw: KneadedWeight) -> jax.Array:
     """Paper-faithful SAC: per-plane matmuls + single rear shift-and-add.
 
-    Segment accumulators S_b accumulate A_t @ signed_plane_b_t over K tiles of
-    extent ``ks`` *in the same order as the Pallas kernel's grid* (K innermost,
-    one partial dot per tile, sequential f32 adds into the segment).  Output =
-    scale * sum_b 2^b S_b.  Matching the kernel's accumulation structure makes
-    this oracle bit-exact against the kernel in interpret mode — the parity
-    tests assert equality, not closeness.  Planes whose occupancy is empty are
-    genuinely skipped by the kernel; here we add their (exactly zero) partials.
+    Replays the Pallas kernel's *compacted-schedule order*: K tiles of extent
+    ``ks`` ascend (k-major, the schedule's sort key) with planes walked within
+    each tile, each partial dot accumulating into its plane's segment S_b.
+    The work items the schedule never dispatches are exactly the all-zero
+    plane tiles, whose partial is exactly 0.0 — adding it is a bitwise no-op
+    — so this dense replay realizes the same per-segment accumulation
+    sequence as the compacted kernel, and the parity tests assert bit-exact
+    *equality*, not closeness.  (``repro.core.schedule.replay_schedule`` is
+    the item-by-item sparse replay; the property tests pin all three paths
+    equal.)  Output = scale * sum_b 2^b S_b — the single rear adder tree.
     """
     mag = bitplanes.unpack_bits(kw.planes, axis=1)                 # [B-1, K, N]
     sign = 1 - 2 * bitplanes.unpack_bits(kw.signs, axis=0).astype(jnp.int8)
     a32 = a.astype(jnp.float32)
     nk = kw.k // kw.ks
-    segments = []
-    for b in range(kw.bits - 1):                                   # static loop
-        plane = (mag[b].astype(jnp.int8) * sign).astype(jnp.float32)
-        s = jnp.zeros((a32.shape[0], kw.n), jnp.float32)
-        for t in range(nk):                                        # K tiles
-            sl = slice(t * kw.ks, (t + 1) * kw.ks)
-            s = s + a32[:, sl] @ plane[sl]                         # S_b += ...
-        segments.append(s)
+    planes = [(mag[b].astype(jnp.int8) * sign).astype(jnp.float32)
+              for b in range(kw.bits - 1)]
+    segments = [jnp.zeros((a32.shape[0], kw.n), jnp.float32)
+                for _ in range(kw.bits - 1)]
+    for t in range(nk):                      # K tiles ascending (grid order)
+        sl = slice(t * kw.ks, (t + 1) * kw.ks)
+        for b in range(kw.bits - 1):         # planes within the K tile
+            segments[b] = segments[b] + a32[:, sl] @ planes[b][sl]
     seg = jnp.stack(segments)                                      # [B-1, M, N]
     weights = (2.0 ** jnp.arange(kw.bits - 1)).reshape(-1, 1, 1)
     out = jnp.sum(seg * weights, axis=0)                           # rear adder
@@ -94,22 +98,24 @@ def sac_matmul(
     """
     lead = a.shape[:-1]
     a2 = a.reshape(-1, a.shape[-1])
-    if a2.shape[1] != kw.k:
-        if a2.shape[1] != kw.logical_k:
-            raise ValueError(
-                f"activation K {a2.shape[1]} matches neither stored "
-                f"{kw.k} nor logical {kw.logical_k}")
-        a2 = jnp.pad(a2, ((0, 0), (0, kw.k - a2.shape[1])))
-    if impl == "planes":
-        out = sac_matmul_planes(a2, kw)
-    elif impl in ("int", "float"):
-        from repro.core.kneading import unknead  # codes * scale, exact
-        out = a2.astype(jnp.float32) @ unknead(kw)
-    elif impl == "pallas":
+    if a2.shape[1] not in (kw.k, kw.logical_k):
+        raise ValueError(
+            f"activation K {a2.shape[1]} matches neither stored "
+            f"{kw.k} nor logical {kw.logical_k}")
+    if impl == "pallas":
+        # the ops-level wrapper owns the logical-K zero-pad policy
         from repro.kernels.sac_matmul.ops import sac_matmul_pallas
         out = sac_matmul_pallas(a2, kw)
     else:
-        raise ValueError(f"unknown impl {impl!r}")
+        if a2.shape[1] != kw.k:
+            a2 = jnp.pad(a2, ((0, 0), (0, kw.k - a2.shape[1])))
+        if impl == "planes":
+            out = sac_matmul_planes(a2, kw)
+        elif impl in ("int", "float"):
+            from repro.core.kneading import unknead  # codes * scale, exact
+            out = a2.astype(jnp.float32) @ unknead(kw)
+        else:
+            raise ValueError(f"unknown impl {impl!r}")
     out = out[:, :kw.logical_n]
     return out.reshape(lead + (kw.logical_n,)).astype(a.dtype)
 

@@ -1,0 +1,150 @@
+"""Occupancy-compacted work schedules for the SAC Pallas kernel.
+
+The occupancy map already knows, at knead time, exactly which
+(plane, K-tile, N-tile) blocks carry essential bits.  The dense-grid kernel
+still *visited* every block and predicated the dot (``pl.when(occ > 0)``) —
+every slack block cost a grid step, an unpack, and a branch.  This module
+turns the metadata into a *schedule* instead: per N-tile, a compacted list of
+the non-empty ``(plane, k_tile)`` work items, so the kernel grid walks real
+work only and executed MXU passes equal the occupancy nonzero count, not
+``(B-1) * K/bk * N/bn``.  This is the TPU realization of front-end
+ineffectual-work scheduling (Bit-Tactical) + essential-bit-only execution
+(Laconic): slack is never dispatched, rather than dispatched-and-skipped.
+
+Work order is **k-major** (k_tile ascending, plane ascending within a
+k_tile): consecutive items then share the activation K-block and the sign
+block, so the kernel's index maps re-request the same blocks and Pallas
+elides the re-fetch.  Within a fixed plane, k_tiles therefore ascend — the
+same per-segment accumulation order as a dense K sweep, which is what keeps
+the compacted kernel bit-exact against the planes oracle.
+
+Ragged tiles are padded to the max work count by *repeating the last real
+item* (index maps of padded steps request already-resident blocks: no DMA),
+and the kernel guards the dot with ``w < counts[j]``.  All-empty N-tiles
+carry count 0 and execute nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["KneadedSchedule", "build_schedule", "replay_schedule"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KneadedSchedule:
+    """Compacted per-N-tile work lists for one kneaded weight.
+
+    Attributes:
+      counts:    int32 [N/n_block] — number of real work items per N-tile.
+      plane_ids: int32 [N/n_block, num_work] — plane index of each item.
+      ktile_ids: int32 [N/n_block, num_work] — K-tile index of each item.
+                 Entries past ``counts[j]`` repeat the tile's last real item
+                 (or 0 for all-empty tiles) so padded grid steps re-request
+                 resident blocks.
+      num_work:  static grid extent of the work dimension:
+                 ``max(1, max(counts))`` (>= 1 so init/epilogue always run).
+      total_work: static sum of counts == occupancy nonzero count == MXU
+                 passes the kernel executes per M-step row of the grid.
+      nk, n_tiles: static dense extents (K/ks, N/n_block) — the dense
+                 schedule would be ``(B-1) * nk`` items per N-tile.
+    """
+
+    counts: jax.Array
+    plane_ids: jax.Array
+    ktile_ids: jax.Array
+    num_work: int = dataclasses.field(metadata=dict(static=True), default=1)
+    total_work: int = dataclasses.field(metadata=dict(static=True), default=0)
+    nk: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_tiles: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    def dense_work(self, bits: int) -> int:
+        """Work items the dense grid would execute: (B-1) * K/ks * N/n_block."""
+        return (bits - 1) * self.nk * self.n_tiles
+
+    def metadata_bytes(self) -> int:
+        return (self.counts.size + self.plane_ids.size
+                + self.ktile_ids.size) * 4
+
+
+def build_schedule(occupancy_map: jax.Array) -> KneadedSchedule:
+    """Flatten an occupancy presence map into a compacted schedule.
+
+    Args:
+      occupancy_map: {0,1} int array [B-1, K/ks, N/n_block] (the unpacked
+        pass-mark metadata).  Host-side (numpy) — kneading is an offline
+        conversion, and ``num_work``/``total_work`` must be static.
+    Returns:
+      A :class:`KneadedSchedule` whose items enumerate exactly the nonzero
+      occupancy entries, k-major per N-tile.
+    """
+    occ = np.asarray(occupancy_map) != 0                   # [B-1, NK, NN]
+    nb, nk, nn = occ.shape
+    counts = occ.sum(axis=(0, 1)).astype(np.int32)         # [NN]
+    num_work = max(1, int(counts.max(initial=0)))
+    plane_ids = np.zeros((nn, num_work), np.int32)
+    ktile_ids = np.zeros((nn, num_work), np.int32)
+    for j in range(nn):
+        # [NK, B-1] nonzero -> row-major: k_tile ascending, plane within
+        kt, pb = np.nonzero(occ[:, :, j].T)
+        c = kt.size
+        if c:
+            plane_ids[j, :c], ktile_ids[j, :c] = pb, kt
+            plane_ids[j, c:], ktile_ids[j, c:] = pb[-1], kt[-1]
+    return KneadedSchedule(
+        counts=jnp.asarray(counts),
+        plane_ids=jnp.asarray(plane_ids),
+        ktile_ids=jnp.asarray(ktile_ids),
+        num_work=num_work,
+        total_work=int(counts.sum()),
+        nk=nk,
+        n_tiles=nn,
+    )
+
+
+def replay_schedule(a, kw) -> jax.Array:
+    """Executable spec of the compacted kernel: walk the schedule on the host.
+
+    Replays, in numpy, exactly the work items the kernel's grid executes —
+    per N-tile, per work item ``w < counts[j]``, one f32 dot accumulated into
+    that item's plane segment, then the rear-adder-tree epilogue.  Used by
+    the schedule property tests as the order-faithful oracle; bit-exact
+    against both ``impl="planes"`` and ``impl="pallas"``.
+
+    Control flow (which items run, in what order) is host-side numpy over the
+    schedule arrays; the arithmetic itself is the same jnp ops as the planes
+    oracle, so accumulation rounding is identical operation-for-operation.
+
+    Args:
+      a:  [M, K] activations (K == kw.k, stored/padded dim).
+      kw: a :class:`repro.core.kneading.KneadedWeight` with a schedule.
+    """
+    from repro.core import bitplanes
+
+    sched = kw.schedule
+    mag = bitplanes.unpack_bits(kw.planes, axis=1)               # [B-1, K, N]
+    sign = 1 - 2 * bitplanes.unpack_bits(kw.signs, axis=0).astype(jnp.int8)
+    a32 = jnp.asarray(a, jnp.float32)
+    counts = np.asarray(sched.counts)
+    plane_ids = np.asarray(sched.plane_ids)
+    ktile_ids = np.asarray(sched.ktile_ids)
+    ks, nb = kw.ks, kw.n_block
+    m = a32.shape[0]
+    weights = (2.0 ** jnp.arange(kw.bits - 1)).reshape(-1, 1, 1)
+    out_tiles = []
+    for j in range(sched.n_tiles):
+        nsl = slice(j * nb, (j + 1) * nb)
+        seg = [jnp.zeros((m, nb), jnp.float32) for _ in range(kw.bits - 1)]
+        for w in range(int(counts[j])):                # real items only
+            b, t = int(plane_ids[j, w]), int(ktile_ids[j, w])
+            ksl = slice(t * ks, (t + 1) * ks)
+            plane = (mag[b, ksl, nsl].astype(jnp.int8)
+                     * sign[ksl, nsl]).astype(jnp.float32)
+            seg[b] = seg[b] + a32[:, ksl] @ plane      # S_b += A_t @ P_bt
+        out_tiles.append(jnp.sum(jnp.stack(seg) * weights, axis=0))
+    out = jnp.concatenate(out_tiles, axis=1)
+    return out * kw.scale

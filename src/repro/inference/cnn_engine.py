@@ -9,8 +9,12 @@ the whole forward pass through the selected SAC execution path:
   impl="float"   — original float weights, plain f32 matmuls (the baseline)
   impl="int"     — integer-code matmul, scale in the epilogue (production CPU)
   impl="planes"  — paper-faithful per-plane SAC (the kernel's semantic oracle)
-  impl="pallas"  — the occupancy-skipping Pallas kernel (interpret on CPU,
-                   compiled on TPU), conv activations streamed in slabs
+  impl="pallas"  — the schedule-compacted Pallas kernel (interpret on CPU,
+                   compiled on TPU): each conv layer is ONE pallas_call whose
+                   grid streams all activation rows and executes only the
+                   work items of the layer's KneadedSchedule — built once
+                   here at engine init (inside knead) and stored on each
+                   KneadedWeight
 
 "planes" and "pallas" are bit-exact against each other; all kneaded paths
 match the float model within the quantization error bound.
@@ -36,8 +40,7 @@ class CNNServingConfig:
     impl: str = "int"          # "float" | "int" | "planes" | "pallas"
     bits: int = 8              # kneaded fixed-point width
     ks: int = 256              # kneading stride == kernel K tile
-    n_block: int = 128         # kernel N tile (occupancy granularity)
-    conv_m_tile: int = 2048    # activation-row slab for the pallas conv path
+    n_block: int = 128         # kernel N tile (occupancy/schedule granularity)
     jit: bool = True
     # Retain the float checkpoint after kneading so layer_report() can
     # derive cycle statistics cheaply.  Set False for long-lived serving
@@ -64,8 +67,7 @@ class CNNServingEngine:
             self.float_params = params if scfg.keep_float_params else None
 
         def fwd(p, x):
-            return cnn.apply(p, x, cfg, impl=scfg.impl,
-                             conv_m_tile=scfg.conv_m_tile)
+            return cnn.apply(p, x, cfg, impl=scfg.impl)
 
         self._fwd = jax.jit(fwd) if scfg.jit else fwd
 
@@ -113,10 +115,15 @@ class CNNServingEngine:
             q = quantize(self.float_params[name]["w"], bits=kw.bits,
                          axis=-1).q
             k = (q.shape[0] // cycle_ks) * cycle_ks
+            sched = kw.schedule
             rows.append({
                 "layer": name,
                 "shape": (kw.logical_k, kw.logical_n),
                 "bytes_vs_bf16": kw.packed_bytes() / kw.dense_bf16_bytes(),
                 "cycle_ratio": float(kneading_ratio(q[:k], kw.bits, cycle_ks)),
+                # compacted-schedule accounting: MXU passes the pallas path
+                # executes per M-step vs what the dense grid would have run
+                "executed_tile_dots": sched.total_work,
+                "dense_tile_dots": sched.dense_work(kw.bits),
             })
         return rows

@@ -1,27 +1,53 @@
-"""Pallas TPU kernel: SAC bit-plane matmul with occupancy skipping.
+"""Pallas TPU kernel: SAC bit-plane matmul on a compacted work schedule.
 
 Hardware mapping of the paper's PE (Fig 5) onto the TPU memory hierarchy:
 
-  throttle buffer + pass marks  -> per-(plane, K-tile, N-tile) occupancy map,
-                                   delivered via scalar prefetch (SMEM) so the
-                                   skip decision is known before the tile body
-  splitter array                -> in-VMEM unpack of bit-packed planes
-                                   (32 weights/uint32 word) + sign application
-  16x16 segment adder fabric    -> one MXU dot per *non-empty* plane tile
-  segment registers S0..S15     -> VMEM scratch accumulator [B-1, bm, bn] f32
+  throttle buffer + pass marks  -> :class:`~repro.core.schedule.KneadedSchedule`
+                                   — the occupancy map compacted at knead time
+                                   into per-N-tile work lists of non-empty
+                                   (plane, K-tile) items, delivered via scalar
+                                   prefetch (SMEM).  The grid walks the lists,
+                                   so slack work is never *dispatched*, rather
+                                   than dispatched-and-predicated-away
+  splitter array                -> in-VMEM unpack of the one bit-packed plane
+                                   the current work item names (32 weights/
+                                   uint32 word) + sign application
+  16x16 segment adder fabric    -> one MXU dot per scheduled work item
+  segment registers S0..S15     -> VMEM scratch accumulator [B-1, bm, bn] f32,
+                                   indexed by the item's plane id
   rear adder tree (shift once)  -> epilogue ``sum_b 2^b * S_b`` executed once
-                                   per output tile at the last K step
+                                   per output tile at the last work step
   per-channel scale             -> applied once in the same epilogue (SAC's
                                    "no intermediate pair-wise partial sums")
 
-Tiling: grid (M/bm, N/bn, K/bk) with K innermost (revisiting=output-stationary).
-``bk`` equals the kneading stride KS — the skip granularity trade-off the
-paper sweeps in Fig 11 (larger KS: fewer, coarser skip opportunities but less
-metadata; smaller KS: more skips, more SMEM metadata).
+Grid: ``(M/bm, N/bn, num_work)`` with the *work list* innermost (revisiting =
+output-stationary).  ``num_work`` is the max per-N-tile work count; tile j
+executes exactly ``counts[j]`` MXU passes (its real items) and idles through
+the rest — padded schedule entries repeat the tile's last real item, so their
+index maps request already-resident blocks and Pallas elides the DMA.  Total
+executed MXU passes per M-step therefore equal the occupancy *nonzero count*,
+not the dense ``(B-1) * K/bk * N/bn`` — the paper's "skip the slack" realized
+at the front-end scheduler rather than in the kernel body.
+
+Work items are k-major (K-tile ascending, plane within), so consecutive items
+share the activation and sign blocks, and per-plane segments accumulate their
+K-tiles in ascending order — the same accumulation sequence as a dense K
+sweep, which keeps this kernel bit-exact against the planes oracle.
+
+``bk`` equals the kneading stride KS — the skip-granularity trade-off the
+paper sweeps in Fig 11.  Larger KS: fewer, coarser skip chances but less
+metadata; smaller KS: finer skips, more metadata.  With packed presence bits
+(1 bit per (plane, K-tile, N-tile)) plus the int32 schedule (a count per
+N-tile + 2 words per work slot, slots = N-tiles x the *max* per-tile
+occupied count), metadata scales with the worst occupied N-tile rather than
+the dense tile count, so small-KS schedules on sparse weights stay cheap.
 
 VMEM budget per step (bm=bn=256, bk=512, B=8):
-  A tile 256x512x4B = 512KB; plane tiles 7x(512/32)x256x4B = 114KB;
-  segment scratch 7x256x256x4B = 1.8MB; out 256KB  => ~2.7MB << VMEM.
+  A tile 256x512x4B = 512KB; one plane tile (512/32)x256x4B = 16KB;
+  segment scratch 7x256x256x4B = 1.8MB; sign-multiplier cache
+  512x256x4B = 512KB; out 256KB  => ~3.1MB << VMEM.
+(The dense-grid kernel staged all B-1 plane tiles per step; the schedule
+names one plane per item, cutting the staged plane footprint (B-1)x.)
 MXU alignment: bm, bn multiples of 128; bk multiple of 256 (>= 8 sublanes of
 packed words after the x32 unpack).
 """
@@ -33,6 +59,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.schedule import KneadedSchedule
 
 WORD = 32
 
@@ -46,40 +74,54 @@ def _unpack_words(words: jax.Array, bk: int) -> jax.Array:
 
 
 def sac_matmul_kernel(
-    occ_ref,        # scalar prefetch: [B-1, K/bk, N/bn] int32
-    a_ref,          # [bm, bk] activations
-    planes_ref,     # [B-1, bk//32, bn] uint32 packed magnitude planes
+    counts_ref,     # scalar prefetch: [N/bn] int32 work counts
+    plane_ids_ref,  # scalar prefetch: [N/bn, num_work] int32
+    ktile_ids_ref,  # scalar prefetch: [N/bn, num_work] int32
+    a_ref,          # [bm, bk] activations (block of the scheduled K-tile)
+    plane_ref,      # [1, bk//32, bn] uint32 — the scheduled plane, packed
     signs_ref,      # [bk//32, bn] uint32 packed sign bits
     scale_ref,      # [1, bn] f32 per-channel scales
     out_ref,        # [bm, bn] f32
     seg_ref,        # VMEM scratch: [B-1, bm, bn] f32 segment accumulators
+    signf_ref,      # VMEM scratch: [bk, bn] f32 cached sign multiplier
+    last_kt_ref,    # SMEM scratch: [1] int32 K-tile the sign cache holds
     *,
     bits: int,
-    nk: int,
+    num_work: int,
 ):
-    k_idx = pl.program_id(2)
-    n_idx = pl.program_id(1)
+    j = pl.program_id(1)
+    w = pl.program_id(2)
 
-    @pl.when(k_idx == 0)
+    @pl.when(w == 0)
     def _init():
         seg_ref[...] = jnp.zeros_like(seg_ref)
+        last_kt_ref[0] = -1                # invalidate the sign cache
 
-    a = a_ref[...].astype(jnp.float32)
-    sign_bits = _unpack_words(signs_ref[...], a.shape[1])
-    # sign multiplier in {-1, +1}: 1 - 2*bit
-    signf = 1.0 - 2.0 * sign_bits.astype(jnp.float32)
+    @pl.when(w < counts_ref[j])            # real work item (else idle pad)
+    def _mxu_pass():
+        b = plane_ids_ref[j, w]            # segment register select
+        kt = ktile_ids_ref[j, w]
+        a = a_ref[...].astype(jnp.float32)
 
-    for b in range(bits - 1):  # static unroll over planes ("splitter array")
-        @pl.when(occ_ref[b, k_idx, n_idx] > 0)   # pass-mark skip
-        def _accumulate(b=b):
-            plane = _unpack_words(planes_ref[b], a.shape[1]).astype(jnp.float32)
-            seg_ref[b] += jax.lax.dot_general(
-                a, plane * signf,
-                dimension_numbers=(((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
+        # k-major order makes consecutive items share the (K-tile, N-tile)
+        # sign block: unpack the {-1,+1} multiplier once per K-tile change,
+        # not once per plane item (j is fixed within a tile's work walk, so
+        # the K-tile id alone keys the cache).
+        @pl.when(kt != last_kt_ref[0])
+        def _refresh_sign_cache():
+            sign_bits = _unpack_words(signs_ref[...], a.shape[1])
+            # sign multiplier in {-1, +1}: 1 - 2*bit
+            signf_ref[...] = 1.0 - 2.0 * sign_bits.astype(jnp.float32)
+            last_kt_ref[0] = kt
 
-    @pl.when(k_idx == nk - 1)
+        plane = _unpack_words(plane_ref[0], a.shape[1]).astype(jnp.float32)
+        seg_ref[b] += jax.lax.dot_general(
+            a, plane * signf_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(w == num_work - 1)
     def _rear_adder_tree():
         # Single shift-and-add over segments + single dequant scale (SAC).
         weights = (2.0 ** jnp.arange(bits - 1, dtype=jnp.float32)).reshape(
@@ -93,7 +135,7 @@ def sac_matmul_pallas_call(
     planes: jax.Array,
     signs: jax.Array,
     scale: jax.Array,
-    occupancy: jax.Array,
+    schedule: KneadedSchedule,
     *,
     bits: int,
     bm: int = 256,
@@ -105,28 +147,39 @@ def sac_matmul_pallas_call(
     m, k = a.shape
     n = planes.shape[-1]
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
-    assert occupancy.shape == (bits - 1, k // bk, n // bn), occupancy.shape
-    nk = k // bk
-    grid = (m // bm, n // bn, nk)
+    assert schedule.nk == k // bk and schedule.n_tiles == n // bn, (
+        schedule.nk, schedule.n_tiles, k // bk, n // bn)
+    num_work = schedule.num_work
+    grid = (m // bm, n // bn, num_work)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=3,
         grid=grid,
-        # NB: with scalar prefetch, index maps receive the prefetch ref last.
+        # NB: with scalar prefetch, index maps receive the prefetch refs
+        # last; they *walk the schedule* — block indices come from the work
+        # lists, not from the grid coordinates.
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk, occ: (i, kk)),
-            pl.BlockSpec((bits - 1, bk // WORD, bn),
-                         lambda i, j, kk, occ: (0, kk, j)),
-            pl.BlockSpec((bk // WORD, bn), lambda i, j, kk, occ: (kk, j)),
-            pl.BlockSpec((1, bn), lambda i, j, kk, occ: (0, j)),
+            pl.BlockSpec((bm, bk),
+                         lambda i, j, w, cnt, pid, kid: (i, kid[j, w])),
+            pl.BlockSpec((1, bk // WORD, bn),
+                         lambda i, j, w, cnt, pid, kid: (pid[j, w],
+                                                         kid[j, w], j)),
+            pl.BlockSpec((bk // WORD, bn),
+                         lambda i, j, w, cnt, pid, kid: (kid[j, w], j)),
+            pl.BlockSpec((1, bn), lambda i, j, w, cnt, pid, kid: (0, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, occ: (i, j)),
-        scratch_shapes=[pltpu.VMEM((bits - 1, bm, bn), jnp.float32)],
+        out_specs=pl.BlockSpec((bm, bn),
+                               lambda i, j, w, cnt, pid, kid: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bits - 1, bm, bn), jnp.float32),
+                        pltpu.VMEM((bk, bn), jnp.float32),
+                        pltpu.SMEM((1,), jnp.int32)],
     )
-    kernel = functools.partial(sac_matmul_kernel, bits=bits, nk=nk)
+    kernel = functools.partial(sac_matmul_kernel, bits=bits,
+                               num_work=num_work)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
-    )(occupancy, a, planes, signs, scale)
+    )(schedule.counts, schedule.plane_ids, schedule.ktile_ids,
+      a, planes, signs, scale)

@@ -3,12 +3,16 @@
 ``sac_matmul_pallas``: the raw [M, K] x kneaded [K, N] op — padding/tiling
 policy and backend dispatch (compiled Pallas on TPU, ``interpret=True``
 elsewhere; this container is CPU-only and interpret mode executes the kernel
-body faithfully for validation).
+body faithfully for validation).  Accepts activations sized to either the
+stored (tile-aligned) or the logical reduction dim and zero-pads internally —
+padded rows meet all-zero weight rows that the schedule never dispatches.
 
-``sac_conv2d``: the batched convolution entry point — im2col + occupancy-
-skipping SAC matmul behind one op, with the activation rows streamed through
-the kernel in bounded slabs so VGG-16-sized [B*H'*W', K] patch matrices never
-materialize a single huge kernel launch.
+``sac_conv2d``: the batched convolution entry point — im2col + schedule-
+compacted SAC matmul behind **one** ``pallas_call``: the kernel grid's M
+dimension streams every activation row of the [B*H'*W', K] patch matrix
+through VMEM one [bm, bk] slab per M-step.  No host-side slab loop, no
+remainder-shape retraces, no concatenate — a VGG-16-sized patch matrix costs
+one launch whose peak VMEM footprint is still a single block.
 """
 from __future__ import annotations
 
@@ -28,9 +32,10 @@ def _on_tpu() -> bool:
 
 @functools.partial(
     jax.jit, static_argnames=("bits", "ks", "n_block", "bm", "interpret"))
-def _run(a, planes, signs, scale, occupancy, *, bits, ks, n_block, bm, interpret):
+def _run(a, planes, signs, scale, schedule, *, bits, ks, n_block, bm,
+         interpret):
     return sac_matmul_pallas_call(
-        a, planes, signs, scale, occupancy,
+        a, planes, signs, scale, schedule,
         bits=bits, bm=bm, bn=n_block, bk=ks,
         interpret=interpret,
     )
@@ -45,19 +50,27 @@ def sac_matmul_pallas(
 ) -> jax.Array:
     """[M, K] @ kneaded [K, N] -> [M, N] f32 via the Pallas SAC kernel.
 
-    M is padded up to the tile size; K/N alignment is guaranteed by the
-    kneaded format (ks | K, n_block | N).
+    M is padded up to the tile size.  K may be either the stored (aligned)
+    ``kw.k`` or the logical ``kw.logical_k`` — logical activations are
+    zero-padded here, exactly as ``sac_conv2d`` does, so direct FC callers
+    need no padding logic of their own.  N alignment is guaranteed by the
+    kneaded format (n_block | N); the output keeps the stored N (slice to
+    ``kw.logical_n`` at the call site if needed).
     """
     if interpret is None:
         interpret = not _on_tpu()
     m, k = a.shape
-    assert k == kw.k, (k, kw.k)
+    if k != kw.k:
+        if k != kw.logical_k:
+            raise ValueError(f"activation K {k} matches neither stored "
+                             f"{kw.k} nor logical {kw.logical_k}")
+        a = jnp.pad(a, ((0, 0), (0, kw.k - k)))
     bm_eff = min(bm, max(8, m))
     pad = (-m) % bm_eff
     if pad:
         a = jnp.pad(a, ((0, pad), (0, 0)))
     out = _run(
-        a, kw.planes, kw.signs, kw.scale, kw.occupancy,
+        a, kw.planes, kw.signs, kw.scale, kw.schedule,
         bits=kw.bits, ks=kw.ks, n_block=kw.n_block, bm=bm_eff,
         interpret=interpret,
     )
@@ -84,7 +97,6 @@ def sac_conv2d(
     stride: int = 1,
     bias: Optional[jax.Array] = None,
     impl: str = "pallas",
-    m_tile: int = 2048,
     bm: int = 256,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -92,11 +104,12 @@ def sac_conv2d(
 
     The filter is the kneaded form of the [C*kh*kw, out_ch] im2col weight
     matrix (use ``knead_padded`` — C*k*k is rarely tile-aligned).  For
-    ``impl="pallas"`` the [B*H'*W', K] activation rows are streamed through
-    the kernel in slabs of ``m_tile`` rows: each slab is one pallas_call, so
-    peak VMEM-side footprint is bounded by the slab, not the image.  Other
-    impls ("planes"/"int"/"float") take the pure-jnp SAC paths — same math,
-    used as oracles and fast CPU fallbacks.
+    ``impl="pallas"`` the whole [B*H'*W', K] patch matrix goes through a
+    *single* ``pallas_call``: the grid's M dimension streams the rows in
+    [bm, bk] blocks, so one launch covers the layer and the VMEM-side
+    footprint stays one block regardless of image size.  Other impls
+    ("planes"/"int"/"float") take the pure-jnp SAC paths — same math, used
+    as oracles and fast CPU fallbacks.
 
     Returns [B, H', W', out_ch] f32 (+ bias if given).
     """
@@ -111,18 +124,7 @@ def sac_conv2d(
         from repro.core.sac import sac_matmul
         out = sac_matmul(a.astype(jnp.float32), kw, impl=impl)
     else:
-        if k0 != kw.k:
-            a = jnp.pad(a, ((0, 0), (0, kw.k - k0)))
-        m = a.shape[0]
-        slabs = []
-        for s in range(0, m, m_tile):                   # activation-batch tiling
-            slab = a[s:min(s + m_tile, m)]
-            # bm passes through unchanged: sac_matmul_pallas clamps it to
-            # min(bm, max(8, m)) itself, keeping the sublane dim >= the f32
-            # (8, 128) tile floor even for a tiny remainder slab
-            slabs.append(sac_matmul_pallas(slab, kw, bm=bm,
-                                           interpret=interpret))
-        out = slabs[0] if len(slabs) == 1 else jnp.concatenate(slabs, axis=0)
+        out = sac_matmul_pallas(a, kw, bm=bm, interpret=interpret)
         out = out[:, :kw.logical_n]
     out = out.reshape(lead + (kw.logical_n,)).astype(jnp.float32)
     if bias is not None:

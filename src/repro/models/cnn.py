@@ -98,15 +98,14 @@ def init(key, cfg: CNNConfig) -> Dict:
 
 
 def apply(params: Dict, x: jax.Array, cfg: CNNConfig,
-          collect_activations: bool = False, impl: str = "float",
-          conv_m_tile: int = 2048):
+          collect_activations: bool = False, impl: str = "float"):
     """x [B, H, W, C] -> logits [B, classes] (+ per-layer matmul inputs).
 
     ``impl`` selects the execution path for kneaded layers (see module
     docstring); "float" runs plain f32 matmuls on float weights.  Kneaded
     conv layers go through :func:`repro.kernels.sac_matmul.ops.sac_conv2d`
-    (im2col + SAC matmul in one op, activation rows streamed in
-    ``conv_m_tile`` slabs on the pallas path).
+    — im2col + schedule-compacted SAC matmul, one ``pallas_call`` per layer
+    with all activation rows streamed through the kernel grid's M dimension.
     """
     acts: Dict[str, jax.Array] = {}
     flat = False
@@ -121,7 +120,7 @@ def apply(params: Dict, x: jax.Array, cfg: CNNConfig,
                     patches = _im2col(x, k, stride)
                     acts[f"conv{i}"] = patches.reshape(-1, patches.shape[-1])
                 x = sac_conv2d(x, p["w"], ksize=k, stride=stride, bias=p["b"],
-                               impl=impl, m_tile=conv_m_tile)
+                               impl=impl)
             else:
                 patches = _im2col(x, k, stride)
                 if collect_activations:

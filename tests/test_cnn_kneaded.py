@@ -68,20 +68,24 @@ def test_pallas_parity_padded_dims(k0, n0):
 def test_occupancy_zero_segment_untouched():
     """occupancy == 0 => the kernel never touches that (plane, tile) segment.
 
-    Proof by falsification: zero the occupancy entries of one plane that
-    *does* carry essential bits.  If the kernel consulted the planes rather
-    than the metadata, the output would be unchanged; because it skips on
-    occupancy, the output must drop exactly that plane's 2^b contribution —
-    which the (metadata-oblivious) planes oracle reproduces only when fed the
-    same plane zeroed out.
+    Proof by falsification: drop one essential-bit-carrying plane from the
+    occupancy map and rebuild the schedule (``with_occupancy`` — the kernel
+    executes the *schedule*, so tampering must go through it).  If the kernel
+    consulted the planes rather than the metadata, the output would be
+    unchanged; because it dispatches scheduled items only, the output must
+    drop exactly that plane's 2^b contribution — which the (metadata-
+    oblivious) planes oracle reproduces only when fed the same plane zeroed
+    out.
     """
     w, a = _wa(11, 8, 512, 128)
     kw = knead(w, bits=8, ks=256, n_block=128)
-    b = int(np.argmax(np.asarray(kw.occupancy).sum(axis=(1, 2))))
-    assert int(np.asarray(kw.occupancy)[b].sum()) > 0
+    occ = kw.occupancy_map()
+    b = int(np.argmax(np.asarray(occ).sum(axis=(1, 2))))
+    assert int(np.asarray(occ)[b].sum()) > 0
 
-    occ0 = kw.occupancy.at[b].set(0)
-    kw_skip = dataclasses.replace(kw, occupancy=occ0)
+    kw_skip = kw.with_occupancy(occ.at[b].set(0))
+    assert (kw_skip.schedule.total_work
+            == kw.schedule.total_work - int(np.asarray(occ)[b].sum()))
     out_skip = sac_matmul_pallas(a, kw_skip, bm=8)
 
     planes0 = kw.planes.at[b].set(jnp.zeros_like(kw.planes[b]))
@@ -108,14 +112,32 @@ def test_sac_conv2d_matches_lax_conv():
         assert float(jnp.max(jnp.abs(out - ref))) <= bound
 
 
-def test_sac_conv2d_slab_streaming_invariant():
-    """The activation-batch tiling (m_tile) must not change the result."""
+def test_sac_conv2d_single_launch():
+    """A conv layer is exactly ONE pallas_call — the grid's M dimension
+    streams every activation row; there is no host-side slab loop — and the
+    M-block size must not change the result."""
+    from repro.kernels.sac_matmul import ops as sac_ops
+
     x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, 3))
     w = jax.random.normal(jax.random.PRNGKey(3), (27, 64)) * 0.1
     kw = knead_padded(w, bits=8, ks=256)
-    full = sac_conv2d(x, kw, ksize=3, impl="pallas", m_tile=4096)
-    slabbed = sac_conv2d(x, kw, ksize=3, impl="pallas", m_tile=32)
-    np.testing.assert_array_equal(np.asarray(full), np.asarray(slabbed))
+
+    calls = []
+    real = sac_ops.sac_matmul_pallas
+
+    def counting(*args, **kwargs):
+        calls.append(1)
+        return real(*args, **kwargs)
+
+    sac_ops.sac_matmul_pallas = counting
+    try:
+        # M = 2*8*8 = 128 rows: multiple bm=32 M-steps, still one launch
+        full = sac_conv2d(x, kw, ksize=3, impl="pallas", bm=256)
+        blocked = sac_conv2d(x, kw, ksize=3, impl="pallas", bm=32)
+    finally:
+        sac_ops.sac_matmul_pallas = real
+    assert len(calls) == 2          # one kernel dispatch per sac_conv2d call
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(blocked))
 
 
 # -------------------------------------------------------- end-to-end engine

@@ -61,8 +61,11 @@ def test_sac_kernel_occupancy_skipping_exact():
     w, a = _wa(9, 8, 512, 128)
     w = w.at[256:].multiply(0.01)
     kw = knead(w, bits=16, ks=256, n_block=128)
-    occ = np.asarray(kw.occupancy)
+    occ = np.asarray(kw.occupancy_map())
     assert occ.sum() < occ.size       # some tiles actually skip
+    # the schedule dispatches exactly the occupied tiles, nothing more
+    assert kw.schedule.total_work == int(occ.sum())
+    assert kw.schedule.total_work < kw.schedule.dense_work(kw.bits)
     out = sac_matmul_pallas(a, kw, bm=8)
     np.testing.assert_allclose(np.asarray(out), np.asarray(sac_matmul_ref(a, kw)),
                                rtol=1e-5, atol=1e-4)
