@@ -12,6 +12,13 @@ actually dispatches (``executed_tile_dots == occupancy nonzeros`` —
 asserted here) against the dense grid's ``(B-1) * K/bk * N/bn``, plus the
 paper's kneaded cycle ratio.
 
+The ``sharded_sweep`` section partitions those same schedules over 4 model
+shards (docs/DESIGN.md §5) and reports per-shard executed work and the
+max/mean imbalance — deterministic, so ``shard_executed_max`` joins the CI
+regression gate.  ``serving`` runs the batched submit()/drain() front end
+on an AlexNet-16 engine and reports per-request latency (wall clock:
+reported, not gated).
+
 ``--quick`` shrinks the raw-kernel shapes/bit sweeps to CI-smoke size (the
 AlexNet sweep is metadata-only and always runs); ``--json PATH`` writes the
 rows *with structured metrics* as JSON — the per-PR perf artifact that
@@ -102,6 +109,20 @@ def sac_rows(quick: bool) -> List[BenchRow]:
     return rows
 
 
+def _blocksparse_fc8(params, ks: int) -> jax.Array:
+    """fc8 with its 50% lowest-L2 (ks x 128) blocks pruned — the shared
+    block-sparse specimen of both gated sweeps (the pruning recipe must not
+    drift between the unsharded and sharded baseline rows)."""
+    from repro.models import cnn
+
+    w = jnp.asarray(cnn.weight_matrices(params)["fc8"])     # [4096, 1024]
+    kb, nb = w.shape[0] // ks, w.shape[1] // 128
+    blocks = w.reshape(kb, ks, nb, 128)
+    norms = jnp.sqrt(jnp.sum(blocks ** 2, axis=(1, 3)))     # [kb, nb]
+    mask = norms >= jnp.median(norms)
+    return (blocks * mask[:, None, :, None]).reshape(w.shape)
+
+
 def alexnet_sweep(bits: int = 8, ks: int = 256,
                   cycle_ks: int = 16) -> List[BenchRow]:
     """Per-layer compacted-schedule accounting on trained AlexNet weights.
@@ -145,13 +166,7 @@ def alexnet_sweep(bits: int = 8, ks: int = 256,
     # granularity is where compaction bites: prune the 50% lowest-L2
     # (256 x 128) blocks of fc8 and the schedule dispatches ~half the MXU
     # passes, which the CI gate then pins.
-    w = jnp.asarray(cnn.weight_matrices(params)["fc8"])     # [4096, 1024]
-    kb, nb = w.shape[0] // ks, w.shape[1] // 128
-    blocks = w.reshape(kb, ks, nb, 128)
-    norms = jnp.sqrt(jnp.sum(blocks ** 2, axis=(1, 3)))     # [kb, nb]
-    mask = norms >= jnp.median(norms)
-    wp = (blocks * mask[:, None, :, None]).reshape(w.shape)
-    kw = knead_padded(wp, bits=bits, ks=ks)
+    kw = knead_padded(_blocksparse_fc8(params, ks), bits=bits, ks=ks)
     met = _schedule_metrics(kw)
     rows.append((
         "alexnet_sweep/fc8_blocksparse50", 0.0,
@@ -161,8 +176,88 @@ def alexnet_sweep(bits: int = 8, ks: int = 256,
     return rows
 
 
+def sharded_sweep(num_shards: int = 4, bits: int = 8,
+                  ks: int = 256) -> List[BenchRow]:
+    """Per-layer N-sharded schedule accounting on trained AlexNet weights.
+
+    Metadata-only, like :func:`alexnet_sweep`: shards every layer's
+    compacted schedule over ``num_shards`` (a plain shard count — no mesh
+    needed for load accounting) and reports each device's executed work.
+    ``shard_executed_max`` is the critical-path load (the slowest device
+    gates the layer), ``shard_imbalance`` = max/mean; both deterministic
+    from the committed weights, so the regression gate pins the max.
+    """
+    from repro.core.schedule import shard_schedule
+    from repro.models import cnn
+
+    rows: List[BenchRow] = []
+    params = cnn_weights("alexnet")
+    for lname, w in cnn.weight_matrices(params).items():
+        kw = knead_padded(jnp.asarray(w), bits=bits, ks=ks)
+        skw = shard_schedule(kw, num_shards)
+        imb = skw.imbalance()
+        met = {
+            "executed_tile_dots": skw.total_work,
+            "dense_tile_dots": skw.dense_work(),
+            "shard_executed_max": imb["max"],
+            "shard_imbalance": imb["imbalance"],
+        }
+        rows.append((
+            f"sharded_sweep/{lname}@{num_shards}", 0.0,
+            f"shard_work={imb['shard_work']} "
+            f"imbalance={imb['imbalance']:.2f}", met))
+
+    # block-sparse fc8 (the alexnet_sweep row where compaction bites):
+    # pruning is occupancy-blind to shard boundaries, so this is the
+    # imbalance stress case the report exists for
+    skw = shard_schedule(
+        knead_padded(_blocksparse_fc8(params, ks), bits=bits, ks=ks),
+        num_shards)
+    imb = skw.imbalance()
+    rows.append((
+        f"sharded_sweep/fc8_blocksparse50@{num_shards}", 0.0,
+        f"shard_work={imb['shard_work']} imbalance={imb['imbalance']:.2f}",
+        {"executed_tile_dots": skw.total_work,
+         "shard_executed_max": imb["max"],
+         "shard_imbalance": imb["imbalance"]}))
+    return rows
+
+
+def serving_rows(quick: bool) -> List[BenchRow]:
+    """Batched submit()/drain() front end: per-request latency on a kneaded
+    AlexNet-16 engine (int path — the production CPU impl; wall clock, so
+    reported but not gated)."""
+    import dataclasses
+
+    from repro.inference.cnn_engine import CNNServingConfig, CNNServingEngine
+    from repro.models import cnn
+
+    cfg = dataclasses.replace(cnn.CNN_ZOO["alexnet"], image_size=16)
+    # init (not the cached trained-at-32 weights): the 16px fc dims differ,
+    # and latency is what this row measures, not schedule statistics
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    n_req = 6 if quick else 12
+    eng = CNNServingEngine(cfg, params,
+                           CNNServingConfig(impl="int", buckets=(2, 4)))
+    xs = jax.random.normal(jax.random.PRNGKey(1),
+                           (n_req, cfg.image_size, cfg.image_size, 3))
+    eng.logits(xs[:4])                       # warm the bucket-4 compile
+    eng.logits(xs[:2])                       # ... and bucket-2
+    for i in range(n_req):
+        eng.submit(xs[i])
+    eng.drain()
+    stats = eng.latency_stats()
+    return [(
+        "serving/batched_alexnet16_int8", stats["mean_ms"] * 1e3,
+        f"req={stats['requests']} p50={stats['p50_ms']:.1f}ms "
+        f"p95={stats['p95_ms']:.1f}ms fill={stats['mean_batch_fill']:.2f}",
+        {"requests": stats["requests"],
+         "mean_batch_fill": stats["mean_batch_fill"]})]
+
+
 def run(quick: bool = False) -> List[BenchRow]:
-    return sac_rows(quick) + alexnet_sweep()
+    return (sac_rows(quick) + alexnet_sweep() + sharded_sweep()
+            + serving_rows(quick))
 
 
 def main(argv: Optional[List[str]] = None) -> None:

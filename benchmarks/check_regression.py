@@ -27,8 +27,13 @@ BASELINE = pathlib.Path(__file__).resolve().parent / "artifacts" / \
     "bench_baseline.json"
 
 # lower-is-better metrics the gate enforces (absolute counts and ratios —
-# all reproducible bit-for-bit from committed weights)
-GATED = ("executed_tile_dots", "cycle_ratio", "max_err")
+# all reproducible bit-for-bit from committed weights).  shard_executed_max
+# is the sharded sweep's critical-path load: the MXU passes the most-loaded
+# device of the 4-shard partition executes — a PR that skews the N-shard
+# balance (or inflates any shard's work list) by >tolerance fails even if
+# the total stays flat.
+GATED = ("executed_tile_dots", "cycle_ratio", "max_err",
+         "shard_executed_max")
 # max_err floor: don't flag 1e-6-scale float noise as a "regression"
 ABS_FLOOR = {"max_err": 1e-4}
 

@@ -5,7 +5,7 @@ One gated cross-attention layer per 5 layers (20 cross-attn applications).
 The vision encoder is a STUB per the assignment: ``input_specs`` feeds
 precomputed patch embeddings [B, num_image_tokens, d_model].
 num_image_tokens=2048 (≈4 image tiles; rounded to the MXU tile — the
-frontend is a stub so only the shape matters, recorded in DESIGN.md §6).
+frontend is a stub so only the shape matters, recorded in docs/DESIGN.md §6).
 """
 import dataclasses
 

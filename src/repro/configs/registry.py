@@ -1,7 +1,7 @@
 """Architecture registry: ``--arch <id>`` resolution for all launchers.
 
 Maps arch ids to (CONFIG, SMOKE) plus the per-arch shape applicability rules
-from DESIGN.md §4 (long_500k skipped for pure full-attention archs).
+from docs/DESIGN.md §4 (long_500k skipped for pure full-attention archs).
 """
 from __future__ import annotations
 
@@ -34,7 +34,7 @@ def get_config(arch: str, smoke: bool = False) -> ModelConfig:
 
 
 def applicable_shapes(cfg: ModelConfig) -> List[InputShape]:
-    """The shape cells this arch runs (DESIGN.md §4).
+    """The shape cells this arch runs (docs/DESIGN.md §4).
 
     long_500k requires sub-quadratic context handling -> only SSM/hybrid
     families run it; pure full-attention archs record the cell as skipped.

@@ -5,7 +5,7 @@ vocab=51865.  The conv audio frontend is a STUB per the assignment:
 ``input_specs`` feeds precomputed frame embeddings [B, encoder_seq, d_model].
 encoder_seq is 1536 (real Whisper: 1500 mel frames -> we round up to the
 512-lane tile for MXU alignment; frontend is a stub so only the shape
-matters — recorded in DESIGN.md §6).
+matters — recorded in docs/DESIGN.md §6).
 """
 import dataclasses
 

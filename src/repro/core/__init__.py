@@ -3,6 +3,7 @@
 Public API:
   quantize / dequantize / fake_quantize      (fixed-point substrate)
   knead / unknead / KneadedWeight            (the kneaded weight format)
+  shard_schedule / ShardedKneadedWeight      (N-sharded serving shards, §5)
   kneaded_cycles / kneading_ratio            (paper Fig 3 cycle semantics)
   sac_matmul / TetrisLinear                  (SAC computing pattern)
   weight_bit_stats                           (Table 1 / Fig 2 statistics)
@@ -14,7 +15,10 @@ from repro.core.quantization import (
 from repro.core.kneading import (
     KneadedWeight, knead, unknead, kneaded_cycles, kneading_ratio,
 )
-from repro.core.schedule import KneadedSchedule, build_schedule, replay_schedule
+from repro.core.schedule import (
+    KneadedSchedule, ShardedKneadedWeight, build_schedule, replay_schedule,
+    shard_schedule,
+)
 from repro.core.sac import sac_matmul, sac_matmul_planes, sac_matmul_int, TetrisLinear
 from repro.core.stats import WeightBitStats, weight_bit_stats, aggregate_stats
 from repro.core import bitplanes, cost_model
@@ -22,7 +26,8 @@ from repro.core import bitplanes, cost_model
 __all__ = [
     "QuantizedTensor", "quantize", "dequantize", "fake_quantize", "storage_dtype",
     "KneadedWeight", "knead", "unknead", "kneaded_cycles", "kneading_ratio",
-    "KneadedSchedule", "build_schedule", "replay_schedule",
+    "KneadedSchedule", "ShardedKneadedWeight", "build_schedule",
+    "replay_schedule", "shard_schedule",
     "sac_matmul", "sac_matmul_planes", "sac_matmul_int", "TetrisLinear",
     "WeightBitStats", "weight_bit_stats", "aggregate_stats",
     "bitplanes", "cost_model",

@@ -31,10 +31,13 @@ import jax.numpy as jnp
 
 from repro.core import bitplanes
 from repro.core.quantization import QuantizedTensor, quantize
-from repro.core.schedule import KneadedSchedule, build_schedule
+from repro.core.schedule import (KneadedSchedule, ShardedKneadedWeight,
+                                 build_schedule, shard_schedule)
 
 __all__ = [
     "KneadedWeight",
+    "ShardedKneadedWeight",
+    "shard_schedule",
     "knead",
     "knead_padded",
     "kneadable_dims",
@@ -146,6 +149,12 @@ class KneadedWeight:
             occupancy=bitplanes.pack_presence(occupancy_map),
             schedule=build_schedule(occupancy_map),
         )
+
+    def shard(self, mesh, axis: str = "model") -> ShardedKneadedWeight:
+        """Partition this weight + schedule along N for a device mesh (one
+        compacted work list per shard; see
+        :func:`repro.core.schedule.shard_schedule` / docs/DESIGN.md §5)."""
+        return shard_schedule(self, mesh, axis=axis)
 
     def metadata_bytes(self) -> int:
         """Pass-mark metadata footprint: packed presence bits + the

@@ -22,16 +22,33 @@ Ragged tiles are padded to the max work count by *repeating the last real
 item* (index maps of padded steps request already-resident blocks: no DMA),
 and the kernel guards the dot with ``w < counts[j]``.  All-empty N-tiles
 carry count 0 and execute nothing.
+
+**Sharding** (:func:`shard_schedule`, docs/DESIGN.md §5): because the work
+lists are independent per N-tile, the schedule partitions along N for free —
+each shard of a device mesh takes a contiguous slab of N-tiles together with
+exactly those tiles' work lists.  The per-tile items and their k-major order
+are untouched, so a shard computes its output columns through the *same*
+accumulation sequence as the single-device kernel and sharded execution
+stays bit-exact.  Load per device is its shard's *occupancy* (sum of its
+tiles' counts), not its dense tile count — the SCNN/Bit-Tactical principle
+of distributing the compacted work list rather than the dense iteration
+space — and :meth:`ShardedKneadedWeight.imbalance` reports how unevenly the
+occupancy landed.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["KneadedSchedule", "build_schedule", "replay_schedule"]
+if TYPE_CHECKING:  # avoid the import cycle (kneading imports this module)
+    from repro.core.kneading import KneadedWeight
+
+__all__ = ["KneadedSchedule", "ShardedKneadedWeight", "build_schedule",
+           "replay_schedule", "shard_schedule"]
 
 
 @jax.tree_util.register_dataclass
@@ -148,3 +165,211 @@ def replay_schedule(a, kw) -> jax.Array:
         out_tiles.append(jnp.sum(jnp.stack(seg) * weights, axis=0))
     out = jnp.concatenate(out_tiles, axis=1)
     return out * kw.scale
+
+
+# ---------------------------------------------------------------------------
+# N-sharded schedules (docs/DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedKneadedWeight:
+    """A kneaded weight partitioned along N into per-device work-list shards.
+
+    Every array carries a leading shard axis of extent ``num_shards``; placed
+    with :func:`repro.runtime.sharding.kneaded_shardings`, that axis maps one
+    slab per mesh device, and ``jax.shard_map`` hands each device its own
+    planes/signs/scale slab *plus its own compacted schedule* — the device
+    executes only the occupancy nonzeros of its N-tiles, never the dense
+    tile count.
+
+    Attributes:
+      planes:    uint32 [S, B-1, K/32, n/S] — magnitude planes, N-sliced.
+      signs:     uint32 [S, K/32, n/S].
+      scale:     f32   [S, 1, n/S].
+      counts:    int32 [S, T] per-shard work counts (T = tiles_per_shard).
+      plane_ids / ktile_ids: int32 [S, T, num_work] per-shard work lists.
+      num_shards, num_work, nk, tiles_per_shard: static grid extents; the
+                 work dim is padded to the *global* max so every shard runs
+                 the same program under shard_map.
+      shard_work: static per-shard occupancy-nonzero totals (the load each
+                 device actually executes per M-step; see :meth:`imbalance`).
+      bits, ks, n_block, k, n, k_orig, n_orig: as on ``KneadedWeight``; ``n``
+                 is the sharded stored extent (tile padding may grow it when
+                 N-tiles don't divide ``num_shards`` — padded tiles carry
+                 count 0 and cost no MXU passes).
+    """
+
+    planes: jax.Array
+    signs: jax.Array
+    scale: jax.Array
+    counts: jax.Array
+    plane_ids: jax.Array
+    ktile_ids: jax.Array
+    num_shards: int = dataclasses.field(metadata=dict(static=True), default=1)
+    num_work: int = dataclasses.field(metadata=dict(static=True), default=1)
+    nk: int = dataclasses.field(metadata=dict(static=True), default=0)
+    tiles_per_shard: int = dataclasses.field(metadata=dict(static=True),
+                                             default=0)
+    shard_work: Tuple[int, ...] = dataclasses.field(
+        metadata=dict(static=True), default=())
+    bits: int = dataclasses.field(metadata=dict(static=True), default=8)
+    ks: int = dataclasses.field(metadata=dict(static=True), default=256)
+    n_block: int = dataclasses.field(metadata=dict(static=True), default=128)
+    k: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n: int = dataclasses.field(metadata=dict(static=True), default=0)
+    k_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def shard_n(self) -> int:
+        """Stored output columns held by each shard."""
+        return self.n // self.num_shards
+
+    @property
+    def logical_k(self) -> int:
+        return self.k_orig or self.k
+
+    @property
+    def logical_n(self) -> int:
+        return self.n_orig or self.n
+
+    @property
+    def total_work(self) -> int:
+        """Occupancy nonzeros across all shards == unsharded total_work."""
+        return sum(self.shard_work)
+
+    @property
+    def _orig_n_tiles(self) -> int:
+        """N-tiles of the weight before shard padding (== the unsharded
+        schedule's n_tiles; knead already padded logical_n to n_block)."""
+        return -(-self.logical_n // self.n_block)
+
+    def dense_work(self) -> int:
+        """Work items the dense grid would execute across all shards.
+
+        Counts the pre-shard-padding tiles only, so this equals the
+        unsharded ``KneadedSchedule.dense_work`` — all-empty shard-padding
+        tiles must not inflate the denominator of skip ratios.
+        """
+        return (self.bits - 1) * self.nk * self._orig_n_tiles
+
+    def schedule_for(self, s: int) -> KneadedSchedule:
+        """Shard ``s``'s compacted schedule (the program each device runs)."""
+        return KneadedSchedule(
+            counts=self.counts[s],
+            plane_ids=self.plane_ids[s],
+            ktile_ids=self.ktile_ids[s],
+            num_work=self.num_work,
+            total_work=self.shard_work[s],
+            nk=self.nk,
+            n_tiles=self.tiles_per_shard,
+        )
+
+    def imbalance(self) -> dict:
+        """Per-shard load report: executed work per device and skew.
+
+        ``imbalance`` is max/mean shard work (1.0 == perfectly balanced); a
+        shard with zero work contributes 0 to the mean but still holds a
+        device, so heavily skewed occupancy shows up directly here.
+        """
+        work = list(self.shard_work)
+        mean = sum(work) / max(1, len(work))
+        return {
+            "shard_work": work,
+            "max": max(work) if work else 0,
+            "mean": mean,
+            "imbalance": (max(work) / mean) if mean else 1.0,
+        }
+
+    def metadata_bytes(self) -> int:
+        return (self.counts.size + self.plane_ids.size
+                + self.ktile_ids.size) * 4
+
+    def packed_bytes(self) -> int:
+        """HBM bytes across all shards: planes + signs + scales + schedule."""
+        return (self.planes.size * 4 + self.signs.size * 4
+                + self.scale.size * 4 + self.metadata_bytes())
+
+    def dense_bf16_bytes(self) -> int:
+        """bf16 bytes of the pre-shard-padding stored weight — same
+        denominator as the unsharded report, so bytes_vs_bf16 keeps its
+        meaning regardless of shard count."""
+        return self.k * self._orig_n_tiles * self.n_block * 2
+
+
+def _mesh_axis_size(mesh, axis: str) -> int:
+    if isinstance(mesh, int):
+        return mesh
+    return mesh.shape[axis]
+
+
+def shard_schedule(kw: "KneadedWeight",
+                   mesh: Union[int, jax.sharding.Mesh],
+                   axis: str = "model") -> ShardedKneadedWeight:
+    """Partition a kneaded weight + its schedule along N for a device mesh.
+
+    Each of the ``mesh.shape[axis]`` shards receives a contiguous slab of
+    N-tiles with exactly those tiles' compacted work lists — per-tile items
+    and k-major order unchanged, so sharded outputs are bit-exact against
+    the single-device kernel.  When the N-tile count does not divide the
+    shard count, all-empty padding tiles (count 0, zero weight columns,
+    scale 1.0) are appended so every shard holds ``tiles_per_shard`` tiles;
+    like knead padding, they cost metadata only, never an MXU pass, and the
+    padded output columns sit past ``logical_n`` where callers already
+    slice.
+
+    Args:
+      kw:   a :class:`repro.core.kneading.KneadedWeight`.
+      mesh: the target mesh (or a plain int shard count for host-side
+            analysis, e.g. the benchmark imbalance sweeps).
+      axis: mesh axis name to shard over (the serving meshes call it
+            "model" — out-channel partitioning is tensor parallelism).
+    Returns:
+      A :class:`ShardedKneadedWeight` with one leading shard axis on every
+      array, ready for ``runtime.sharding.kneaded_shardings`` placement.
+    """
+    sched = kw.schedule
+    num = _mesh_axis_size(mesh, axis)
+    if num < 1:
+        raise ValueError(f"shard count must be >= 1, got {num}")
+    nn = sched.n_tiles
+    tps = -(-nn // num)                       # tiles per shard (ceil)
+    pad_tiles = tps * num - nn
+    pad_cols = pad_tiles * kw.n_block
+    n_pad = kw.n + pad_cols
+
+    planes, signs = kw.planes, kw.signs
+    scale = jnp.broadcast_to(jnp.asarray(kw.scale, jnp.float32)
+                             .reshape(1, -1), (1, kw.n))
+    counts = sched.counts
+    plane_ids, ktile_ids = sched.plane_ids, sched.ktile_ids
+    if pad_tiles:
+        planes = jnp.pad(planes, ((0, 0), (0, 0), (0, pad_cols)))
+        signs = jnp.pad(signs, ((0, 0), (0, pad_cols)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad_cols)), constant_values=1.0)
+        counts = jnp.pad(counts, (0, pad_tiles))
+        plane_ids = jnp.pad(plane_ids, ((0, pad_tiles), (0, 0)))
+        ktile_ids = jnp.pad(ktile_ids, ((0, pad_tiles), (0, 0)))
+
+    shard_n = n_pad // num
+    nb = kw.bits - 1
+    kwords = kw.k // 32
+    shard_work = tuple(
+        int(c) for c in np.asarray(counts).reshape(num, tps).sum(axis=1))
+    return ShardedKneadedWeight(
+        planes=planes.reshape(nb, kwords, num, shard_n).transpose(2, 0, 1, 3),
+        signs=signs.reshape(kwords, num, shard_n).transpose(1, 0, 2),
+        scale=scale.reshape(1, num, shard_n).transpose(1, 0, 2),
+        counts=counts.reshape(num, tps),
+        plane_ids=plane_ids.reshape(num, tps, sched.num_work),
+        ktile_ids=ktile_ids.reshape(num, tps, sched.num_work),
+        num_shards=num,
+        num_work=sched.num_work,
+        nk=sched.nk,
+        tiles_per_shard=tps,
+        shard_work=shard_work,
+        bits=kw.bits, ks=kw.ks, n_block=kw.n_block,
+        k=kw.k, n=n_pad,
+        k_orig=kw.k_orig, n_orig=kw.n_orig or (kw.n if pad_tiles else 0),
+    )

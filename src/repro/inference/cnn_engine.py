@@ -18,16 +18,33 @@ the whole forward pass through the selected SAC execution path:
 
 "planes" and "pallas" are bit-exact against each other; all kneaded paths
 match the float model within the quantization error bound.
+
+Scaling (docs/DESIGN.md §5):
+
+* ``shards=N`` partitions every layer's KneadedSchedule along its
+  out-channel dimension over an N-device "model" mesh — the Pallas kernel
+  then launches once per device under ``jax.shard_map``, each device
+  executing only *its shard's* occupancy nonzeros (sharded == single-device
+  bit-exact; ``layer_report`` adds per-shard work + imbalance columns).
+* ``submit()``/``drain()`` is the batched request front end: single-image
+  requests queue and drain in padding-bucket micro-batches — the stacked
+  batch pads up to a fixed bucket size so the jitted forward compiles once
+  per bucket while the kernel grid's M dimension absorbs the extra rows —
+  with per-request latency recorded (``latency_stats``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Dict, List
+import time
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.kneading import KneadedWeight, kneading_ratio
+from repro.core.kneading import (KneadedWeight, ShardedKneadedWeight,
+                                 kneaded_codes, kneading_ratio)
 from repro.core.quantization import quantize
 from repro.core.sac import SAC_IMPLS
 from repro.models import cnn
@@ -45,8 +62,22 @@ class CNNServingConfig:
     # Retain the float checkpoint after kneading so layer_report() can
     # derive cycle statistics cheaply.  Set False for long-lived serving
     # processes that only need the forward pass — the kneaded params alone
-    # then realize the advertised ~bits/16 memory footprint in-process.
+    # then realize the advertised ~bits/16 memory footprint in-process, and
+    # layer_report() falls back to reconstructing codes from the packed
+    # planes (exact, just slower).
     keep_float_params: bool = True
+    # Shard every layer's kneaded weight + schedule along N over this many
+    # mesh devices (0/1 = single device).  Requires impl="pallas" — the
+    # sharded work lists are a kernel-path artifact.
+    shards: int = 0
+    mesh_axis: str = "model"
+    # Micro-batch padding buckets for submit()/drain(), ascending.  A drain
+    # chunk pads to the smallest bucket that fits so the jitted forward
+    # compiles once per bucket instead of once per request count.
+    buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    # Per-request log entries retained for latency_stats() — a sliding
+    # window, so a long-lived serving process doesn't grow without bound.
+    stats_window: int = 4096
 
 
 class CNNServingEngine:
@@ -57,7 +88,15 @@ class CNNServingEngine:
         if scfg.impl not in SAC_IMPLS:
             raise ValueError(f"impl must be one of {SAC_IMPLS}, "
                              f"got {scfg.impl!r}")
+        if scfg.shards > 1 and scfg.impl != "pallas":
+            raise ValueError("sharded serving runs the Pallas kernel; "
+                             f"impl={scfg.impl!r} is single-device only")
+        if tuple(scfg.buckets) != tuple(sorted(scfg.buckets)) or \
+                not all(b > 0 for b in scfg.buckets):
+            raise ValueError(f"buckets must be positive ascending, "
+                             f"got {scfg.buckets}")
         self.cfg, self.scfg = cfg, scfg
+        self.mesh = None
         if scfg.impl == "float":
             self.params = params
             self.float_params = params
@@ -65,11 +104,26 @@ class CNNServingEngine:
             self.params = cnn.knead_params(params, bits=scfg.bits,
                                            ks=scfg.ks, n_block=scfg.n_block)
             self.float_params = params if scfg.keep_float_params else None
+            if scfg.shards > 1:
+                from repro.launch.mesh import make_model_mesh
+                from repro.runtime.sharding import kneaded_shardings
+                self.mesh = make_model_mesh(scfg.shards)
+                self.params = cnn.shard_kneaded_params(
+                    self.params, self.mesh, axis=scfg.mesh_axis)
+                self.params = jax.device_put(
+                    self.params, kneaded_shardings(self.params, self.mesh,
+                                                   axis=scfg.mesh_axis))
 
         def fwd(p, x):
-            return cnn.apply(p, x, cfg, impl=scfg.impl)
+            return cnn.apply(p, x, cfg, impl=scfg.impl, mesh=self.mesh,
+                             shard_axis=scfg.mesh_axis)
 
         self._fwd = jax.jit(fwd) if scfg.jit else fwd
+        # batched front end state
+        self._next_id = 0
+        self._pending: List[Tuple[int, jax.Array, float]] = []
+        self._request_log: Deque[Dict[str, Any]] = collections.deque(
+            maxlen=scfg.stats_window)
 
     def logits(self, x: jax.Array) -> jax.Array:
         """x [B, H, W, C] -> logits [B, num_classes]."""
@@ -79,51 +133,145 @@ class CNNServingEngine:
         """x [B, H, W, C] -> predicted class ids [B] int32."""
         return jnp.argmax(self.logits(x), axis=-1).astype(jnp.int32)
 
+    # ------------------------------------------------- batched request front end
+
+    def submit(self, x: jax.Array) -> int:
+        """Queue one single-image request [H, W, C]; returns a request id.
+
+        Requests accumulate until :meth:`drain` runs them in padding-bucket
+        micro-batches; per-request latency is measured from this call to the
+        completion of the micro-batch that served it.
+        """
+        if x.ndim != 3:
+            raise ValueError(f"submit takes one image [H, W, C], "
+                             f"got shape {tuple(x.shape)}")
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append((rid, x, time.perf_counter()))
+        return rid
+
+    def drain(self) -> Dict[int, jax.Array]:
+        """Serve every pending request; returns {request_id: logits}.
+
+        Pending requests split into chunks of at most ``max(buckets)``
+        images; each chunk stacks on the batch axis and zero-pads up to the
+        smallest bucket that fits (the padded rows ride the kernel grid's M
+        dimension and are sliced off), so the jitted forward sees one shape
+        per bucket — no per-request-count retraces.
+        """
+        buckets = self.scfg.buckets
+        cap = buckets[-1]
+        results: Dict[int, jax.Array] = {}
+        while self._pending:
+            chunk, self._pending = self._pending[:cap], self._pending[cap:]
+            b = len(chunk)
+            bucket = next(bk for bk in buckets if bk >= b)
+            xb = jnp.stack([x for _, x, _ in chunk])
+            if bucket > b:
+                xb = jnp.pad(xb, ((0, bucket - b),) + ((0, 0),) * 3)
+            out = jax.block_until_ready(self.logits(xb))[:b]
+            done = time.perf_counter()
+            for i, (rid, _, t0) in enumerate(chunk):
+                results[rid] = out[i]
+                self._request_log.append({
+                    "id": rid,
+                    "latency_ms": (done - t0) * 1e3,
+                    "bucket": bucket,
+                    "batch_fill": b / bucket,
+                })
+        return results
+
+    def latency_stats(self) -> Dict[str, float]:
+        """Per-request latency distribution over the last ``stats_window``
+        drained requests (a sliding window, bounded by construction)."""
+        lat = np.array([r["latency_ms"] for r in self._request_log])
+        if lat.size == 0:
+            return {"requests": 0}
+        fill = np.array([r["batch_fill"] for r in self._request_log])
+        return {
+            "requests": int(lat.size),
+            "mean_ms": float(lat.mean()),
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p95_ms": float(np.percentile(lat, 95)),
+            "max_ms": float(lat.max()),
+            "mean_batch_fill": float(fill.mean()),
+        }
+
     # ------------------------------------------------------------- reporting
 
     def serving_bytes(self) -> int:
         """HBM bytes of the serving params (kneaded packed or bf16 floats)."""
         total = 0
+        kinds = (KneadedWeight, ShardedKneadedWeight)
         for leaf in jax.tree.leaves(self.params,
-                                    is_leaf=lambda x: isinstance(
-                                        x, KneadedWeight)):
-            if isinstance(leaf, KneadedWeight):
+                                    is_leaf=lambda x: isinstance(x, kinds)):
+            if isinstance(leaf, kinds):
                 total += leaf.packed_bytes()
             else:
                 total += leaf.size * 2          # floats serve as bf16
         return total
+
+    def _layer_codes(self, name: str, kw) -> Optional[jax.Array]:
+        """Integer codes of one layer for the cycle model.
+
+        From the retained float checkpoint when present (cheap re-quantize);
+        otherwise reconstructed exactly from the packed planes — identical
+        on the logical region, since alignment padding quantizes to all-zero
+        codes without disturbing the per-channel scales.  Sharded engines
+        without the float checkpoint skip cycle stats (the planes live
+        device-sharded; gathering them to count bits defeats the point of
+        dropping the checkpoint).
+        """
+        if self.float_params is not None:
+            return quantize(self.float_params[name]["w"], bits=kw.bits,
+                            axis=-1).q
+        if isinstance(kw, KneadedWeight):
+            return kneaded_codes(kw)[:kw.logical_k, :kw.logical_n]
+        return None
 
     def layer_report(self, cycle_ks: int = 16) -> List[Dict[str, Any]]:
         """Per-layer kneaded footprint + cycle stats (Fig 9/11 companions).
 
         ``cycle_ks`` is the *hardware* kneading stride of the cycle model
         (the paper sweeps 10..32) — independent of the storage-format stride
-        ``scfg.ks`` that sizes the kernel's K tiles.  Codes come from
-        re-quantizing the retained float checkpoint (identical to the
-        kneaded codes on the logical region, without unpacking the
-        [B-1, K, N] bit planes of every layer just to count them).
+        ``scfg.ks`` that sizes the kernel's K tiles.  Codes come from the
+        float checkpoint when retained, else from the packed planes (see
+        :meth:`_layer_codes`); ``cycle_ratio`` is None when neither is
+        available.  Sharded engines add ``shard_work`` (executed MXU passes
+        per device) and ``shard_imbalance`` (max/mean) columns.
         """
         if self.scfg.impl == "float":
             raise ValueError("layer_report needs kneaded params "
                              "(impl != 'float')")
-        if self.float_params is None:
-            raise ValueError("layer_report needs the float checkpoint; "
-                             "construct with keep_float_params=True")
         rows = []
         for name, p in self.params.items():
             kw = p["w"]
-            q = quantize(self.float_params[name]["w"], bits=kw.bits,
-                         axis=-1).q
-            k = (q.shape[0] // cycle_ks) * cycle_ks
-            sched = kw.schedule
-            rows.append({
+            row = {
                 "layer": name,
                 "shape": (kw.logical_k, kw.logical_n),
                 "bytes_vs_bf16": kw.packed_bytes() / kw.dense_bf16_bytes(),
-                "cycle_ratio": float(kneading_ratio(q[:k], kw.bits, cycle_ks)),
+                "cycle_ratio": None,
+            }
+            if isinstance(kw, ShardedKneadedWeight):
+                imb = kw.imbalance()
+                row.update({
+                    "executed_tile_dots": kw.total_work,
+                    "dense_tile_dots": kw.dense_work(),
+                    "shard_work": imb["shard_work"],
+                    "shard_imbalance": imb["imbalance"],
+                })
+            else:
+                sched = kw.schedule
                 # compacted-schedule accounting: MXU passes the pallas path
                 # executes per M-step vs what the dense grid would have run
-                "executed_tile_dots": sched.total_work,
-                "dense_tile_dots": sched.dense_work(kw.bits),
-            })
+                row.update({
+                    "executed_tile_dots": sched.total_work,
+                    "dense_tile_dots": sched.dense_work(kw.bits),
+                })
+            q = self._layer_codes(name, kw)
+            if q is not None:
+                k = (q.shape[0] // cycle_ks) * cycle_ks
+                row["cycle_ratio"] = float(
+                    kneading_ratio(q[:k], kw.bits, cycle_ks))
+            rows.append(row)
         return rows

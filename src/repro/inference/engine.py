@@ -3,7 +3,7 @@
 ``ServingEngine`` owns: prefill -> padded KV cache -> batched greedy/sampled
 decode.  ``knead_params`` converts a trained float checkpoint into the
 serving representation (QuantizedTensor int8 / PackedInt4), the deployable
-form of the paper's weight kneading (DESIGN.md §2) — every projection
+form of the paper's weight kneading (docs/DESIGN.md §2) — every projection
 matmul below runs as integer codes with a single epilogue scale (SAC).
 """
 from __future__ import annotations

@@ -34,6 +34,14 @@ share the activation and sign blocks, and per-plane segments accumulate their
 K-tiles in ascending order — the same accumulation sequence as a dense K
 sweep, which keeps this kernel bit-exact against the planes oracle.
 
+Multi-device (docs/DESIGN.md §5): the grid's N dimension partitions across a
+mesh by sharding the *schedule* — ``ops.sac_matmul_pallas_sharded`` launches
+this same kernel under ``jax.shard_map`` with each device holding a
+contiguous slab of N-tiles plus exactly those tiles' work lists
+(``ShardedKneadedWeight``), so per-device executed MXU passes equal the
+shard's occupancy nonzeros and per-tile accumulation order — hence
+bit-exactness — is preserved shard by shard.
+
 ``bk`` equals the kneading stride KS — the skip-granularity trade-off the
 paper sweeps in Fig 11.  Larger KS: fewer, coarser skip chances but less
 metadata; smaller KS: finer skips, more metadata.  With packed presence bits

@@ -13,6 +13,16 @@ dimension streams every activation row of the [B*H'*W', K] patch matrix
 through VMEM one [bm, bk] slab per M-step.  No host-side slab loop, no
 remainder-shape retraces, no concatenate — a VGG-16-sized patch matrix costs
 one launch whose peak VMEM footprint is still a single block.
+
+``sac_matmul_pallas_sharded``: the multi-device form (docs/DESIGN.md §5) —
+the same kernel launched under ``jax.shard_map`` over a mesh axis, one
+launch per device, each device walking *its own shard's* compacted work
+list (a :class:`~repro.core.schedule.ShardedKneadedWeight`).  Activations
+are replicated, outputs concatenate along N with no collective in the
+matmul itself; per-device executed MXU passes equal that shard's occupancy
+nonzeros.  Both ``sac_conv2d`` and the FC dispatch accept sharded weights
+with a ``mesh``; ``mesh=None`` runs the shards serially on one device —
+the oracle the multi-device parity tests compare against.
 """
 from __future__ import annotations
 
@@ -21,8 +31,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-from repro.core.kneading import KneadedWeight
+from repro.core.kneading import KneadedWeight, ShardedKneadedWeight
+from repro.core.schedule import KneadedSchedule
 from repro.kernels.sac_matmul.kernel import sac_matmul_pallas_call
 
 
@@ -59,6 +72,20 @@ def sac_matmul_pallas(
     """
     if interpret is None:
         interpret = not _on_tpu()
+    a, m, bm_eff = _pad_activations(a, kw, bm)
+    out = _run(
+        a, kw.planes, kw.signs, kw.scale, kw.schedule,
+        bits=kw.bits, ks=kw.ks, n_block=kw.n_block, bm=bm_eff,
+        interpret=interpret,
+    )
+    return out[:m]
+
+
+def _pad_activations(a: jax.Array, kw, bm: int):
+    """The M/K padding policy shared by the unsharded and sharded entry
+    points: accept logical-K activations (zero-pad to the stored dim — the
+    padded rows meet all-zero weight rows the schedule never dispatches)
+    and round M up to the effective block size."""
     m, k = a.shape
     if k != kw.k:
         if k != kw.logical_k:
@@ -69,12 +96,67 @@ def sac_matmul_pallas(
     pad = (-m) % bm_eff
     if pad:
         a = jnp.pad(a, ((0, pad), (0, 0)))
-    out = _run(
-        a, kw.planes, kw.signs, kw.scale, kw.schedule,
-        bits=kw.bits, ks=kw.ks, n_block=kw.n_block, bm=bm_eff,
-        interpret=interpret,
-    )
-    return out[:m] if pad else out
+    return a, m, bm_eff
+
+
+def sac_matmul_pallas_sharded(
+    a: jax.Array,
+    skw: ShardedKneadedWeight,
+    mesh=None,
+    axis: str = "model",
+    *,
+    bm: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """[M, K] @ N-sharded kneaded [K, N] -> [M, N] f32, one kernel per shard.
+
+    With a ``mesh``, runs under ``jax.shard_map`` over ``axis``: activations
+    replicated, every weight/schedule array split on its leading shard dim,
+    each device launching the SAC kernel on its own compacted work list and
+    writing its [M, N/S] output slab — the outputs concatenate along N
+    (``out_specs=P(None, axis)``), so the matmul itself needs no collective.
+    All shards run the same program: the work-dim extent is the *global*
+    ``num_work`` and per-shard ragged tails idle exactly like ragged N-tiles
+    do on one device.
+
+    With ``mesh=None``, executes the shards serially on the local device and
+    concatenates — bit-identical output (each shard's N-tiles keep their
+    single-device work lists and k-major order), used as the parity oracle
+    and for host-side analysis without a mesh.
+
+    Output keeps the sharded stored N (slice to ``skw.logical_n`` at the
+    call site, as with the unsharded op).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    a, m, bm_eff = _pad_activations(a, skw, bm)
+
+    def one_shard(a_, planes, signs, scale, counts, pids, kids):
+        # inside shard_map every arg holds this device's slab with the
+        # leading shard axis collapsed to extent 1
+        sched = KneadedSchedule(
+            counts=counts[0], plane_ids=pids[0], ktile_ids=kids[0],
+            num_work=skw.num_work, total_work=skw.total_work,
+            nk=skw.nk, n_tiles=skw.tiles_per_shard)
+        return sac_matmul_pallas_call(
+            a_, planes[0], signs[0], scale[0], sched,
+            bits=skw.bits, bm=bm_eff, bn=skw.n_block, bk=skw.ks,
+            interpret=interpret)
+
+    if mesh is None:
+        outs = [one_shard(a, skw.planes[s:s + 1], skw.signs[s:s + 1],
+                          skw.scale[s:s + 1], skw.counts[s:s + 1],
+                          skw.plane_ids[s:s + 1], skw.ktile_ids[s:s + 1])
+                for s in range(skw.num_shards)]
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        sharded = (P(axis),) * 6
+        out = shard_map(
+            one_shard, mesh=mesh, in_specs=(P(),) + sharded,
+            out_specs=P(None, axis), check_rep=False,
+        )(a, skw.planes, skw.signs, skw.scale, skw.counts,
+          skw.plane_ids, skw.ktile_ids)
+    return out[:m]
 
 
 def im2col(x: jax.Array, k: int, stride: int) -> jax.Array:
@@ -91,13 +173,15 @@ def im2col(x: jax.Array, k: int, stride: int) -> jax.Array:
 
 def sac_conv2d(
     x: jax.Array,
-    kw: KneadedWeight,
+    kw,
     *,
     ksize: int,
     stride: int = 1,
     bias: Optional[jax.Array] = None,
     impl: str = "pallas",
     bm: int = 256,
+    mesh=None,
+    axis: str = "model",
     interpret: bool | None = None,
 ) -> jax.Array:
     """2-D convolution as im2col + SAC matmul against a kneaded filter.
@@ -111,6 +195,12 @@ def sac_conv2d(
     ("planes"/"int"/"float") take the pure-jnp SAC paths — same math, used
     as oracles and fast CPU fallbacks.
 
+    A :class:`~repro.core.schedule.ShardedKneadedWeight` filter routes
+    through :func:`sac_matmul_pallas_sharded` (one kernel launch per mesh
+    device, each walking its own shard's work list; ``mesh=None`` = serial
+    oracle).  Sharded weights are a Pallas-path artifact, so ``impl`` must
+    be "pallas" for them.
+
     Returns [B, H', W', out_ch] f32 (+ bias if given).
     """
     patches = im2col(x, ksize, stride)                  # [B, H', W', C*k*k]
@@ -120,7 +210,14 @@ def sac_conv2d(
     if k0 not in (kw.k, kw.logical_k):
         raise ValueError(f"patch K {k0} does not match kneaded weight "
                          f"(stored {kw.k}, logical {kw.logical_k})")
-    if impl != "pallas":
+    if isinstance(kw, ShardedKneadedWeight):
+        if impl != "pallas":
+            raise ValueError("sharded kneaded weights execute through the "
+                             f"Pallas kernel only, got impl={impl!r}")
+        out = sac_matmul_pallas_sharded(a, kw, mesh, axis, bm=bm,
+                                        interpret=interpret)
+        out = out[:, :kw.logical_n]
+    elif impl != "pallas":
         from repro.core.sac import sac_matmul
         out = sac_matmul(a.astype(jnp.float32), kw, impl=impl)
     else:

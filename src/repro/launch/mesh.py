@@ -26,6 +26,24 @@ def make_host_mesh():
     return jax.make_mesh((n,), ("data",))
 
 
+def make_model_mesh(num_devices: int | None = None):
+    """The first ``num_devices`` devices as a 1-D "model" mesh.
+
+    The sharded kneaded CNN serving mesh (docs/DESIGN.md §5): out-channel
+    (N) shards of every layer's compacted schedule live one per device on
+    this axis.  ``None`` takes every visible device; on CPU force more with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    import numpy as np
+    devs = jax.devices()
+    if num_devices is not None:
+        if num_devices > len(devs):
+            raise ValueError(f"requested {num_devices} devices, "
+                             f"only {len(devs)} visible")
+        devs = devs[:num_devices]
+    return jax.sharding.Mesh(np.asarray(devs), ("model",))
+
+
 # v5e hardware constants used by the roofline analysis (benchmarks/roofline).
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

@@ -4,7 +4,7 @@ All blocks are functional: ``*_init(key, cfg) -> params`` and
 ``*_apply(params, x, ...) -> y``.  Params are plain dicts of f32 arrays so a
 stack of layers can be created with vmap and scanned over.
 
-MoE follows the expert-parallel design in DESIGN.md §3: routing is computed
+MoE follows the expert-parallel design in docs/DESIGN.md §3: routing is computed
 replicated (router weight is tiny), dispatch/expert-compute/combine run under
 ``shard_map`` with experts sharded on the "model" axis and one psum to
 combine — the same reduction pattern as Megatron TP, so no extra collective

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kneading import KneadedWeight, knead_padded
+from repro.core.kneading import (KneadedWeight, ShardedKneadedWeight,
+                                 knead_padded, shard_schedule)
 # the single conv-lowering definition, shared with sac_conv2d so float and
 # kneaded convolutions see identical patch layouts
 from repro.kernels.sac_matmul.ops import im2col as _im2col
@@ -98,7 +99,8 @@ def init(key, cfg: CNNConfig) -> Dict:
 
 
 def apply(params: Dict, x: jax.Array, cfg: CNNConfig,
-          collect_activations: bool = False, impl: str = "float"):
+          collect_activations: bool = False, impl: str = "float",
+          mesh=None, shard_axis: str = "model"):
     """x [B, H, W, C] -> logits [B, classes] (+ per-layer matmul inputs).
 
     ``impl`` selects the execution path for kneaded layers (see module
@@ -106,6 +108,10 @@ def apply(params: Dict, x: jax.Array, cfg: CNNConfig,
     conv layers go through :func:`repro.kernels.sac_matmul.ops.sac_conv2d`
     — im2col + schedule-compacted SAC matmul, one ``pallas_call`` per layer
     with all activation rows streamed through the kernel grid's M dimension.
+    ``ShardedKneadedWeight`` layers (see :func:`shard_kneaded_params`) run
+    one kernel launch per ``mesh`` device over ``shard_axis``, each walking
+    its own shard's compacted work list; ``mesh=None`` executes the shards
+    serially (the single-device oracle).
     """
     acts: Dict[str, jax.Array] = {}
     flat = False
@@ -114,13 +120,13 @@ def apply(params: Dict, x: jax.Array, cfg: CNNConfig,
         if kind == "conv":
             _, out_c, k, stride = item
             p = params[f"conv{i}"]
-            if isinstance(p["w"], KneadedWeight):
+            if isinstance(p["w"], (KneadedWeight, ShardedKneadedWeight)):
                 from repro.kernels.sac_matmul.ops import sac_conv2d
                 if collect_activations:
                     patches = _im2col(x, k, stride)
                     acts[f"conv{i}"] = patches.reshape(-1, patches.shape[-1])
                 x = sac_conv2d(x, p["w"], ksize=k, stride=stride, bias=p["b"],
-                               impl=impl)
+                               impl=impl, mesh=mesh, axis=shard_axis)
             else:
                 patches = _im2col(x, k, stride)
                 if collect_activations:
@@ -139,7 +145,12 @@ def apply(params: Dict, x: jax.Array, cfg: CNNConfig,
             if collect_activations:
                 acts[f"fc{i}"] = x
             p = params[f"fc{i}"]
-            x = L.matmul_any(x, p["w"], jnp.float32, impl=impl) + p["b"]
+            if isinstance(p["w"], ShardedKneadedWeight):
+                from repro.kernels.sac_matmul.ops import sac_matmul_pallas_sharded
+                out = sac_matmul_pallas_sharded(x, p["w"], mesh, shard_axis)
+                x = out[:, :p["w"].logical_n] + p["b"]
+            else:
+                x = L.matmul_any(x, p["w"], jnp.float32, impl=impl) + p["b"]
             if i != len(cfg.spec) - 1:
                 x = jax.nn.relu(x)
     if x.ndim == 4:                 # NiN: global average pooling head
@@ -162,6 +173,20 @@ def knead_params(params: Dict, bits: int = 8, ks: int = 256,
                                        n_block=n_block),
                      "b": p["b"]}
     return out
+
+
+def shard_kneaded_params(kparams: Dict, mesh, axis: str = "model") -> Dict:
+    """Partition every KneadedWeight of a kneaded checkpoint along N.
+
+    Each layer's compacted schedule splits into per-device work lists
+    (:func:`repro.core.schedule.shard_schedule`); biases stay whole
+    (replicated — every device's epilogue adds its output-column slice).
+    Place the result with ``runtime.sharding.kneaded_shardings`` before
+    serving.
+    """
+    return {name: {"w": shard_schedule(p["w"], mesh, axis=axis),
+                   "b": p["b"]}
+            for name, p in kparams.items()}
 
 
 def weight_matrices(params: Dict) -> Dict[str, jax.Array]:

@@ -191,6 +191,40 @@ def tree_shardings(params_shape: PyTree, mesh: Mesh,
                         tree_param_specs(params_shape, mesh, mode))
 
 
+# ------------------------------------------------------- kneaded CNN serving
+
+def kneaded_param_specs(tree: PyTree, axis: str = "model") -> PyTree:
+    """PartitionSpecs for a kneaded-CNN param tree (docs/DESIGN.md §5).
+
+    :class:`~repro.core.schedule.ShardedKneadedWeight` leaves stack one
+    weight/schedule slab per device on their leading shard axis — every
+    array field gets ``P(axis)`` so device *i* holds shard *i*'s planes,
+    signs, scales, AND compacted work lists (the schedule shards with the
+    weight; there is no replicated metadata to walk).  Unsharded leaves
+    (biases, float weights, unsharded ``KneadedWeight``) replicate: they are
+    tiny or consumed by every device's epilogue.
+    """
+    from repro.core.schedule import ShardedKneadedWeight
+
+    def spec(leaf):
+        if isinstance(leaf, ShardedKneadedWeight):
+            return jax.tree.map(lambda _: P(axis), leaf)
+        return jax.tree.map(lambda _: P(), leaf)
+
+    return jax.tree.map(
+        spec, tree,
+        is_leaf=lambda x: isinstance(x, ShardedKneadedWeight))
+
+
+def kneaded_shardings(tree: PyTree, mesh: Mesh,
+                      axis: str = "model") -> PyTree:
+    """NamedShardings matching :func:`kneaded_param_specs` — pass straight to
+    ``jax.device_put`` to place a sharded kneaded checkpoint on the mesh."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        kneaded_param_specs(tree, axis),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 def cache_spec_sharding(cache_shape: PyTree, mesh: Mesh,
                         batch: int) -> PyTree:
     """Decode caches: batch axis over (pod, data); the (large) seq axis of

@@ -1,0 +1,344 @@
+"""Sharded kneaded serving: schedule partitioning, shard_map parity, batching.
+
+Covers the docs/DESIGN.md §5 path end to end: ``shard_schedule`` structure
+(including N-tiles that don't divide the shard count and shards whose work
+lists are entirely empty), bit-exact parity of the shard_map-launched Pallas
+kernel against the serial single-device shard walk, the full-AlexNet
+multi-device acceptance criterion, and the engine's padding-bucket batched
+front end.
+
+Oracle note: forcing many host devices re-partitions XLA CPU's matmul
+threading, which perturbs the f32 reduction order of the *dense jnp* planes
+oracle (measured: bit-identical at 1-2 forced devices, ~1e-6 drift at 4).
+The schedule-walking Pallas kernel is bit-stable across device counts, so
+the multi-device test compares sharded-pallas (N-device subprocess) against
+the planes oracle computed where it is well-defined — a clean single-device
+subprocess — exactly the "sharded pallas == single-device planes oracle"
+criterion.  In-process assertions under a forced-device environment compare
+pallas against pallas for the same reason.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kneading import knead, knead_padded
+from repro.core.sac import sac_matmul
+from repro.core.schedule import build_schedule, shard_schedule
+from repro.inference.cnn_engine import CNNServingConfig, CNNServingEngine
+from repro.kernels.sac_matmul.ops import (sac_conv2d, sac_matmul_pallas,
+                                          sac_matmul_pallas_sharded)
+from repro.models import cnn
+
+
+def _sparse_w(seed, k, n, sparsity=0.0):
+    kk = jax.random.split(jax.random.PRNGKey(seed), 2)
+    w = jax.random.normal(kk[0], (k, n)) * 0.05
+    if sparsity > 0:
+        keep = jax.random.uniform(kk[1], (k, n)) >= sparsity
+        w = w * keep
+    return w
+
+
+# ------------------------------------------------------------- structure
+
+def test_shard_schedule_splits_work_lists():
+    """Shards take contiguous N-tile slabs with exactly those tiles' work
+    lists; per-shard occupancy totals partition the unsharded total."""
+    rng = np.random.default_rng(0)
+    occ = (rng.random((7, 5, 8)) < 0.3).astype(np.int32)
+    kw = knead(_sparse_w(1, 5 * 256, 8 * 128), bits=8).with_occupancy(
+        jnp.asarray(occ))
+    skw = shard_schedule(kw, 4)
+    sched = kw.schedule
+    assert skw.num_shards == 4 and skw.tiles_per_shard == 2
+    assert skw.num_work == sched.num_work
+    assert skw.total_work == sched.total_work
+    assert sum(skw.shard_work) == int(occ.sum())
+    for s in range(4):
+        sub = skw.schedule_for(s)
+        tiles = slice(2 * s, 2 * s + 2)
+        np.testing.assert_array_equal(np.asarray(sub.counts),
+                                      np.asarray(sched.counts)[tiles])
+        np.testing.assert_array_equal(np.asarray(sub.plane_ids),
+                                      np.asarray(sched.plane_ids)[tiles])
+        np.testing.assert_array_equal(np.asarray(sub.ktile_ids),
+                                      np.asarray(sched.ktile_ids)[tiles])
+        assert sub.total_work == int(occ[:, :, tiles].sum())
+    # weight slabs are the matching contiguous column slices
+    for s in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(skw.planes[s]),
+            np.asarray(kw.planes)[:, :, s * 256:(s + 1) * 256])
+
+
+def test_shard_schedule_indivisible_tiles():
+    """N-tiles not divisible by the shard count: all-empty padding tiles are
+    appended (count 0, zero columns) and parity stays bit-exact after the
+    logical-N slice."""
+    w = _sparse_w(2, 512, 384)               # 3 N-tiles
+    a = jax.random.normal(jax.random.PRNGKey(3), (8, 512))
+    kw = knead(w, bits=8)
+    skw = shard_schedule(kw, 2)
+    assert skw.tiles_per_shard == 2 and skw.n == 512  # 3 -> 4 tiles
+    assert skw.logical_n == 384
+    assert skw.total_work == kw.schedule.total_work   # padding adds no work
+    out = sac_matmul_pallas_sharded(a, skw, bm=8)[:, :skw.logical_n]
+    ref = sac_matmul_pallas(a, kw, bm=8)[:, :384]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_shard_schedule_empty_shard():
+    """A shard whose entire work list is empty executes nothing and writes
+    zeros (its columns are all-zero), while other shards are unaffected."""
+    w = _sparse_w(4, 512, 512).at[:, 256:].set(0.0)
+    a = jax.random.normal(jax.random.PRNGKey(5), (8, 512))
+    kw = knead(w, bits=8)
+    skw = shard_schedule(kw, 2)
+    assert skw.shard_work[1] == 0 and skw.shard_work[0] > 0
+    imb = skw.imbalance()
+    assert imb["shard_work"] == [skw.shard_work[0], 0]
+    assert imb["imbalance"] == pytest.approx(2.0)
+    out = sac_matmul_pallas_sharded(a, skw, bm=8)
+    np.testing.assert_array_equal(np.asarray(out[:, 256:]),
+                                  np.zeros((8, 256), np.float32))
+    ref = sac_matmul_pallas(a, kw, bm=8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_shard_schedule_all_empty():
+    """All-zero weights shard into all-empty work lists on every device."""
+    kw = knead(jnp.zeros((512, 256)), bits=8)
+    skw = shard_schedule(kw, 2)
+    assert skw.shard_work == (0, 0) and skw.total_work == 0
+    a = jax.random.normal(jax.random.PRNGKey(0), (8, 512))
+    out = sac_matmul_pallas_sharded(a, skw, bm=8)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.zeros((8, 256), np.float32))
+
+
+def test_shard_schedule_structure_from_occupancy():
+    """Sharding commutes with schedule building: shard s of the full
+    schedule == the schedule built from shard s's occupancy columns, up to
+    work-dim padding width."""
+    rng = np.random.default_rng(7)
+    occ = (rng.random((3, 4, 6)) < 0.4).astype(np.int32)
+    kw = knead(_sparse_w(8, 4 * 256, 6 * 128, 0.0), bits=4).with_occupancy(
+        jnp.asarray(occ))
+    skw = shard_schedule(kw, 3)
+    for s in range(3):
+        local = build_schedule(occ[:, :, 2 * s:2 * s + 2])
+        sub = skw.schedule_for(s)
+        np.testing.assert_array_equal(np.asarray(sub.counts),
+                                      np.asarray(local.counts))
+        w = local.num_work          # sub pads the work dim to the global max
+        np.testing.assert_array_equal(np.asarray(sub.plane_ids[:, :w]),
+                                      np.asarray(local.plane_ids))
+        np.testing.assert_array_equal(np.asarray(sub.ktile_ids[:, :w]),
+                                      np.asarray(local.ktile_ids))
+
+
+# --------------------------------------------------------- serial parity
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_serial_sharded_matmul_bit_exact(shards):
+    """The serial shard walk (mesh=None) is bit-exact against the unsharded
+    kernel for any shard count — each shard replays its N-tiles' work lists
+    in the single-device order."""
+    w = _sparse_w(10, 512, 512, sparsity=0.7)
+    a = jax.random.normal(jax.random.PRNGKey(11), (8, 512))
+    kw = knead(w, bits=8)
+    skw = shard_schedule(kw, shards)
+    out = sac_matmul_pallas_sharded(a, skw, bm=8)
+    ref = sac_matmul_pallas(a, kw, bm=8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    if jax.device_count() == 1:
+        # the dense jnp oracle is only bitwise-well-defined on one device
+        # (see module docstring); the multi-device CI job skips this leg
+        planes = sac_matmul(a, kw, impl="planes")
+        np.testing.assert_array_equal(np.asarray(out[:, :kw.logical_n]),
+                                      np.asarray(planes))
+
+
+def test_sharded_conv2d_bit_exact():
+    """sac_conv2d with a sharded im2col filter == unsharded pallas conv."""
+    x = jax.random.normal(jax.random.PRNGKey(12), (2, 10, 10, 8))
+    w = _sparse_w(13, 72, 200)
+    kw = knead_padded(w, bits=8)
+    skw = shard_schedule(kw, 2)
+    out = sac_conv2d(x, skw, ksize=3, impl="pallas")
+    ref = sac_conv2d(x, kw, ksize=3, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    with pytest.raises(ValueError, match="Pallas kernel only"):
+        sac_conv2d(x, skw, ksize=3, impl="planes")
+
+
+# ------------------------------------------- multi-device acceptance test
+
+_ORACLE = textwrap.dedent("""
+    import dataclasses, json, sys
+    import jax, numpy as np
+    from repro.inference.cnn_engine import CNNServingConfig, CNNServingEngine
+    from repro.models import cnn
+    cfg = dataclasses.replace(cnn.CNN_ZOO["alexnet"], image_size=16)
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    eng = CNNServingEngine(cfg, params,
+                           CNNServingConfig(impl="planes", jit=False))
+    np.save(sys.argv[1], np.asarray(eng.logits(x)))
+    print(json.dumps({"devices": jax.device_count()}))
+""")
+
+_SHARDED = textwrap.dedent("""
+    import dataclasses, json, sys
+    import jax, numpy as np
+    from repro.inference.cnn_engine import CNNServingConfig, CNNServingEngine
+    from repro.models import cnn
+    cfg = dataclasses.replace(cnn.CNN_ZOO["alexnet"], image_size=16)
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    shards = jax.device_count()
+    assert shards >= 2, "multi-device run needs forced host devices"
+    eng = CNNServingEngine(cfg, params, CNNServingConfig(
+        impl="pallas", jit=False, shards=shards))
+    out = np.asarray(eng.logits(x))
+    # in-process cross-check against the unsharded kernel (bit-stable
+    # across device counts, unlike the dense jnp oracle)
+    ref = np.asarray(CNNServingEngine(cfg, params, CNNServingConfig(
+        impl="pallas", jit=False)).logits(x))
+    assert np.array_equal(out, ref), "sharded != unsharded pallas"
+    rep = eng.layer_report()
+    np.save(sys.argv[1], out)
+    print(json.dumps({
+        "devices": shards,
+        "total_work": sum(r["executed_tile_dots"] for r in rep),
+        "max_imbalance": max(r["shard_imbalance"] for r in rep),
+    }))
+""")
+
+
+def _run(code, out_path, extra_env):
+    env = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH",
+                                                       "/usr/bin:/bin")}
+    env.update(extra_env)
+    res = subprocess.run([sys.executable, "-c", code, out_path],
+                         capture_output=True, text=True, env=env,
+                         cwd=".", timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_alexnet_bit_exact_vs_single_device_oracle(tmp_path):
+    """ACCEPTANCE: a full AlexNet forward, every layer's schedule sharded
+    over >=2 forced host devices and launched under shard_map, is bit-exact
+    against the planes oracle computed on a clean single device."""
+    n_force = int(os.environ.get("REPRO_SHARD_TEST_DEVICES", "4"))
+    sharded_meta = _run(
+        _SHARDED, str(tmp_path / "sharded.npy"),
+        {"XLA_FLAGS": f"--xla_force_host_platform_device_count={n_force}",
+         "JAX_PLATFORMS": "cpu"})
+    oracle_meta = _run(_ORACLE, str(tmp_path / "oracle.npy"),
+                       {"JAX_PLATFORMS": "cpu"})
+    assert sharded_meta["devices"] == n_force
+    assert oracle_meta["devices"] == 1
+    out = np.load(tmp_path / "sharded.npy")
+    ref = np.load(tmp_path / "oracle.npy")
+    np.testing.assert_array_equal(out, ref)
+    assert sharded_meta["total_work"] > 0
+    assert sharded_meta["max_imbalance"] >= 1.0
+
+
+# -------------------------------------------------- batched front end
+
+def _nin16():
+    import dataclasses
+    return dataclasses.replace(cnn.CNN_ZOO["nin"], image_size=16)
+
+
+def test_engine_submit_drain_matches_batch_logits():
+    cfg = _nin16()
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    eng = CNNServingEngine(cfg, params,
+                           CNNServingConfig(impl="int", buckets=(2, 4)))
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 16, 16, 3))
+    ids = [eng.submit(xs[i]) for i in range(5)]
+    res = eng.drain()
+    assert sorted(res) == sorted(ids)
+    ref = eng.logits(xs)
+    for i, rid in enumerate(ids):
+        # allclose, not bitwise: the drain chunks run at bucket shapes
+        # (4 and 2), and XLA CPU's threading partitions dense matmuls
+        # differently per batch shape — ~1e-7-level f32 drift vs the
+        # batch-5 reference (amplified under forced host devices)
+        np.testing.assert_allclose(np.asarray(res[rid]),
+                                   np.asarray(ref[i]),
+                                   rtol=1e-5, atol=1e-5)
+    stats = eng.latency_stats()
+    assert stats["requests"] == 5
+    assert stats["p95_ms"] >= stats["p50_ms"] > 0
+    # 5 requests over buckets (2,4): chunks of 4 + 1->2 padded
+    assert stats["mean_batch_fill"] == pytest.approx((4 * 1.0 + 0.5) / 5)
+    assert eng.drain() == {}                 # queue fully drained
+
+
+def test_engine_bucket_underfill():
+    """A request count that fills no bucket exactly still pads up to the
+    next bucket and serves every request correctly."""
+    cfg = _nin16()
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    eng = CNNServingEngine(cfg, params,
+                           CNNServingConfig(impl="int", buckets=(4,)))
+    xs = jax.random.normal(jax.random.PRNGKey(2), (3, 16, 16, 3))
+    ids = [eng.submit(xs[i]) for i in range(3)]
+    res = eng.drain()
+    # bitwise against the same padded-bucket shape drain itself runs
+    # (batch 4); cross-shape comparisons are only allclose (see above)
+    ref = eng.logits(jnp.pad(xs, ((0, 1), (0, 0), (0, 0), (0, 0))))
+    for i, rid in enumerate(ids):
+        np.testing.assert_array_equal(np.asarray(res[rid]),
+                                      np.asarray(ref[i]))
+    log = list(eng._request_log)
+    assert all(r["bucket"] == 4 for r in log)
+    assert all(r["batch_fill"] == pytest.approx(0.75) for r in log)
+
+
+def test_engine_submit_rejects_batched_input():
+    cfg = _nin16()
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    eng = CNNServingEngine(cfg, params, CNNServingConfig(impl="int"))
+    with pytest.raises(ValueError, match="one image"):
+        eng.submit(jnp.zeros((2, 16, 16, 3)))
+
+
+def test_engine_sharded_requires_pallas():
+    cfg = _nin16()
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="single-device only"):
+        CNNServingEngine(cfg, params,
+                         CNNServingConfig(impl="int", shards=2))
+
+
+# ------------------------------------- keep_float_params=False regression
+
+def test_layer_report_without_float_checkpoint():
+    """keep_float_params=False must not crash layer_report: codes fall back
+    to exact reconstruction from the packed planes, and every statistic
+    matches the float-checkpoint path bit-for-bit."""
+    cfg = _nin16()
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    lean = CNNServingEngine(
+        cfg, params, CNNServingConfig(impl="int", keep_float_params=False))
+    assert lean.float_params is None
+    full = CNNServingEngine(cfg, params, CNNServingConfig(impl="int"))
+    r_lean, r_full = lean.layer_report(), full.layer_report()
+    assert len(r_lean) == len(r_full) == len(params)
+    for a, b in zip(r_lean, r_full):
+        assert a["layer"] == b["layer"]
+        assert a["executed_tile_dots"] == b["executed_tile_dots"]
+        assert a["cycle_ratio"] == pytest.approx(b["cycle_ratio"], abs=0.0)
