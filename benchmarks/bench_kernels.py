@@ -15,9 +15,11 @@ paper's kneaded cycle ratio.
 The ``sharded_sweep`` section partitions those same schedules over 4 model
 shards (docs/DESIGN.md §5) and reports per-shard executed work and the
 max/mean imbalance — deterministic, so ``shard_executed_max`` joins the CI
-regression gate.  ``serving`` runs the batched submit()/drain() front end
-on an AlexNet-16 engine and reports per-request latency (wall clock:
-reported, not gated).
+regression gate.  ``decode_sweep`` runs the kernel's decode-GEMV fast path
+(docs/DESIGN.md §7) at batch 1/8/32 — tokens/s reported, the deterministic
+tile-dot counts and max-error gated.  ``serving`` runs the batched
+submit()/drain() front end on an AlexNet-16 engine and reports per-request
+latency (wall clock: reported, not gated).
 
 ``--quick`` shrinks the raw-kernel shapes/bit sweeps to CI-smoke size (the
 AlexNet sweep is metadata-only and always runs); ``--json PATH`` writes the
@@ -39,7 +41,7 @@ from repro.core import knead, quantize
 from repro.core.kneading import knead_padded, kneading_ratio
 from repro.kernels.kneaded_gemm.ops import kneaded_gemm
 from repro.kernels.kneaded_gemm.ref import pack_int4
-from repro.kernels.sac_matmul.ops import sac_matmul_pallas
+from repro.kernels.sac_matmul.ops import m_block, sac_matmul_pallas
 from repro.kernels.sac_matmul.ref import sac_matmul_ref
 
 # (name, us_per_call, derived-string, structured metrics for the JSON gate)
@@ -223,6 +225,38 @@ def sharded_sweep(num_shards: int = 4, bits: int = 8,
     return rows
 
 
+def decode_sweep(quick: bool) -> List[BenchRow]:
+    """Decode-GEMV rows: the SAC kernel in the LM decode regime (M = batch).
+
+    Runs ``sac_matmul_pallas`` at batch 1/8/32 on a fixed-seed LM-projection
+    -sized kneaded weight — the ops-layer fast path shrinks the M block to
+    the 8-row sublane floor instead of padding a one-token step to the full
+    streamed block.  ``tokens_per_s`` is interpret-mode wall clock (reported,
+    not gated); the deterministic ``executed_tile_dots`` and ``max_err`` of
+    each row join the CI regression gate, so a change that inflates the
+    decode path's dispatched MXU passes (or its accuracy) fails the build.
+    """
+    rows: List[BenchRow] = []
+    k, n = (256, 128) if quick else (1024, 512)
+    w = jax.random.normal(jax.random.PRNGKey(11), (k, n)) * 0.02
+    kw = knead(w, bits=8, ks=256, n_block=128)
+    for batch in (1, 8, 32):
+        a = jax.random.normal(jax.random.PRNGKey(12), (batch, k))
+        us, out = timed(lambda: sac_matmul_pallas(a, kw), repeats=1)
+        err = float(jnp.max(jnp.abs(out - sac_matmul_ref(a, kw))))
+        tok_s = batch / (us * 1e-6)
+        bm_eff = m_block(batch)     # the fast path the kernel actually ran
+        met = _schedule_metrics(kw)
+        met["max_err"] = err
+        met["tokens_per_s"] = tok_s          # wall clock: not gated
+        rows.append((
+            f"decode_sweep/gemv_b{batch}", us,
+            f"tok_s={tok_s:.1f} bm_eff={bm_eff} "
+            f"tile_dots={met['executed_tile_dots']}/{met['dense_tile_dots']} "
+            f"max_err={err:.1e}", met))
+    return rows
+
+
 def serving_rows(quick: bool) -> List[BenchRow]:
     """Batched submit()/drain() front end: per-request latency on a kneaded
     AlexNet-16 engine (int path — the production CPU impl; wall clock, so
@@ -257,7 +291,7 @@ def serving_rows(quick: bool) -> List[BenchRow]:
 
 def run(quick: bool = False) -> List[BenchRow]:
     return (sac_rows(quick) + alexnet_sweep() + sharded_sweep()
-            + serving_rows(quick))
+            + decode_sweep(quick) + serving_rows(quick))
 
 
 def main(argv: Optional[List[str]] = None) -> None:

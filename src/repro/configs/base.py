@@ -74,6 +74,11 @@ class ModelConfig:
     # int8 KV cache (dense/moe families): kneads the *cache* the same way
     # weights are kneaded — per-(position, head) scale, 2x decode cache bytes
     kv_cache_bits: int = 0            # 0 = bf16, 8 = int8
+    # SAC execution path for KneadedWeight projection leaves (the kneaded
+    # LM serving form, docs/DESIGN.md §7): "float" | "int" | "planes" |
+    # "pallas".  Float-weight leaves ignore it, so training configs can
+    # leave the default; ServingEngine overrides it to match its impl.
+    sac_impl: str = "int"
     window: int = 0                   # >0: sliding-window attention (long ctx)
     # training
     microbatch: int = 0               # 0 -> no gradient accumulation

@@ -40,6 +40,7 @@ __all__ = [
     "shard_schedule",
     "knead",
     "knead_padded",
+    "knead_stacked",
     "kneadable_dims",
     "kneaded_codes",
     "unknead",
@@ -105,6 +106,11 @@ class KneadedWeight:
                  "same as stored" — the un-padded case).  Padding rows/cols
                  are all-zero codes whose occupancy is 0, so the kernel skips
                  them for free and the padded matmul is exact.
+
+    A *stacked* kneaded weight (:func:`knead_stacked`) carries one extra
+    leading layer axis on every array field while the statics describe the
+    per-layer dims — ``jax.lax.scan`` over such a pytree slices out layer
+    l's exact per-layer ``KneadedWeight`` each step.
     """
 
     planes: jax.Array
@@ -246,6 +252,69 @@ def knead_padded(
     if (kp, np_) == (k0, n0):
         return kw
     return dataclasses.replace(kw, k_orig=k0, n_orig=n0)
+
+
+def knead_stacked(
+    w: jax.Array,
+    bits: int = 8,
+    ks: int = 256,
+    n_block: int = 128,
+) -> KneadedWeight:
+    """Knead a stacked [L, K, N] scan-layer weight, one layer at a time.
+
+    The LM stacks scan over layers with stacked params, so the serving form
+    must slice per layer inside ``jax.lax.scan``.  Every layer is kneaded
+    *independently* (its own per-out-channel scales, occupancy map, and
+    compacted schedule — layer l's work lists are exactly what
+    ``knead_padded(w[l])`` would build) and the resulting arrays stack with
+    a leading layer axis: ``planes [L, B-1, K/32, N]``, ``signs``, ``scale``,
+    ``occupancy``, and the schedule's ``counts [L, NN]`` /
+    ``plane_ids``/``ktile_ids [L, NN, num_work]``.  Scanning this pytree as
+    ``xs`` hands the body layer l's :class:`KneadedWeight`, bit-identical to
+    the unstacked knead of that layer.
+
+    The work dimension is padded to the *max* ``num_work`` across layers by
+    repeating each N-tile's last item — the same convention as intra-tile
+    ragged padding, so padded grid steps re-request resident blocks and idle
+    under the kernel's ``w < counts[j]`` guard.  Statics on the stacked
+    weight: ``num_work`` is the cross-layer max and ``total_work`` the
+    all-layer sum (a per-layer slice therefore reports the stack totals —
+    use :func:`knead_padded` per layer when per-layer accounting matters).
+    """
+    if w.ndim != 3:
+        raise ValueError(f"knead_stacked expects [L, K, N], got {w.shape}")
+    per_layer = [knead_padded(w[layer], bits=bits, ks=ks, n_block=n_block)
+                 for layer in range(w.shape[0])]
+    num_work = max(kw.schedule.num_work for kw in per_layer)
+
+    def pad_work(ids: jax.Array, have: int) -> jax.Array:
+        if have == num_work:
+            return ids
+        return jnp.concatenate(
+            [ids, jnp.repeat(ids[:, -1:], num_work - have, axis=1)], axis=1)
+
+    first = per_layer[0]
+    sched = KneadedSchedule(
+        counts=jnp.stack([kw.schedule.counts for kw in per_layer]),
+        plane_ids=jnp.stack([pad_work(kw.schedule.plane_ids,
+                                      kw.schedule.num_work)
+                             for kw in per_layer]),
+        ktile_ids=jnp.stack([pad_work(kw.schedule.ktile_ids,
+                                      kw.schedule.num_work)
+                             for kw in per_layer]),
+        num_work=num_work,
+        total_work=sum(kw.schedule.total_work for kw in per_layer),
+        nk=first.schedule.nk,
+        n_tiles=first.schedule.n_tiles,
+    )
+    return dataclasses.replace(
+        first,
+        planes=jnp.stack([kw.planes for kw in per_layer]),
+        signs=jnp.stack([kw.signs for kw in per_layer]),
+        scale=jnp.stack([kw.scale for kw in per_layer]),
+        occupancy=jnp.stack([kw.occupancy for kw in per_layer]),
+        schedule=sched,
+    )
 
 
 def kneaded_codes(kw: KneadedWeight) -> jax.Array:

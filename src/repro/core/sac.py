@@ -110,7 +110,18 @@ def sac_matmul(
         if a2.shape[1] != kw.k:
             a2 = jnp.pad(a2, ((0, 0), (0, kw.k - a2.shape[1])))
         if impl == "planes":
-            out = sac_matmul_planes(a2, kw)
+            # Replay the kernel's padded M: the pallas grid rounds M up to
+            # its block (zero rows — exact), and XLA CPU picks *different*
+            # dense-matmul micro-kernels for, e.g., M=7 vs M=8 at wide N,
+            # which changes f32 reduction order at ~1e-6.  Padding here
+            # keeps the oracle operand-for-operand comparable, so planes ==
+            # pallas stays bitwise at every M.
+            from repro.kernels.sac_matmul.ops import m_block
+            m0 = a2.shape[0]
+            pad = (-m0) % m_block(m0)
+            if pad:
+                a2 = jnp.pad(a2, ((0, pad), (0, 0)))
+            out = sac_matmul_planes(a2, kw)[:m0]
         elif impl in ("int", "float"):
             from repro.core.kneading import unknead  # codes * scale, exact
             out = a2.astype(jnp.float32) @ unknead(kw)

@@ -1,10 +1,16 @@
 """Batched serving engine with the Tetris kneaded-weight path.
 
 ``ServingEngine`` owns: prefill -> padded KV cache -> batched greedy/sampled
-decode.  ``knead_params`` converts a trained float checkpoint into the
-serving representation (QuantizedTensor int8 / PackedInt4), the deployable
-form of the paper's weight kneading (docs/DESIGN.md §2) — every projection
-matmul below runs as integer codes with a single epilogue scale (SAC).
+decode.  ``knead_params`` converts a trained float checkpoint into a serving
+representation — either the quantized-matmul form (QuantizedTensor int8 /
+PackedInt4: integer codes with a single epilogue scale) or, with
+``kneaded=True``, the full kneaded bit-plane form of docs/DESIGN.md §7:
+every ``_KNEADABLE`` projection becomes a :class:`KneadedWeight` with a
+compacted :class:`~repro.core.schedule.KneadedSchedule`, stacked [L, K, N]
+scan-layer weights kneaded per layer with a leading schedule axis
+(:func:`repro.core.kneading.knead_stacked`), so attention and MLP
+projections dispatch through ``sac_matmul`` — and with ``impl="pallas"``
+through the schedule-walking SAC kernel's decode-GEMV fast path.
 """
 from __future__ import annotations
 
@@ -15,7 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.kneading import KneadedWeight, knead_padded, knead_stacked
 from repro.core.quantization import quantize
+from repro.core.sac import SAC_IMPLS
 from repro.kernels.kneaded_gemm.ref import pack_int4
 from repro.models.layers import PackedInt4
 from repro.models.lm import LanguageModel
@@ -26,12 +34,22 @@ _KNEADABLE = ("wq", "wk", "wv", "wo", "wi", "wi_gate", "wi_up", "up",
               "down", "w_in", "w_out", "in_proj", "out_proj", "unembed")
 
 
-def knead_params(params: PyTree, bits: int = 8,
-                 min_dim: int = 128) -> PyTree:
-    """Quantize every kneadable projection leaf to intN serving form.
+def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
+                 *, kneaded: bool = False, ks: int = 256,
+                 n_block: int = 128) -> PyTree:
+    """Convert every kneadable projection leaf to its serving form.
 
-    Stacked [L, K, N] leaves are quantized per (layer, out-channel).
-    bits=8 -> QuantizedTensor; bits=4 -> PackedInt4 (nibble-packed along K).
+    Default (``kneaded=False``): quantize to intN codes — bits=8 ->
+    QuantizedTensor; bits=4 -> PackedInt4 (nibble-packed along K).  Stacked
+    [L, K, N] leaves are quantized per (layer, out-channel).
+
+    ``kneaded=True``: the full bit-plane serving form — [K, N] leaves via
+    :func:`~repro.core.kneading.knead_padded` (arbitrary dims zero-padded to
+    tile alignment, exactly), stacked [L, K, N] scan-layer leaves via
+    :func:`~repro.core.kneading.knead_stacked` (per-layer schedules with a
+    leading layer axis, sliced out by the model's layer scans).  Leaves with
+    more than one stack dim (MoE expert banks — executed inside shard_map)
+    stay float; ``min_dim`` gates tiny projections either way.
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
@@ -41,8 +59,21 @@ def knead_params(params: PyTree, bits: int = 8,
         ok = (name in _KNEADABLE and hasattr(leaf, "ndim") and leaf.ndim >= 2
               and leaf.shape[-1] >= min_dim and leaf.shape[-2] >= min_dim
               and leaf.shape[-2] % 2 == 0)
+        if kneaded:
+            ok = (name in _KNEADABLE and hasattr(leaf, "ndim")
+                  and leaf.ndim in (2, 3)
+                  and leaf.shape[-1] >= min_dim
+                  and leaf.shape[-2] >= min_dim)
         if not ok:
             out.append(leaf)
+            continue
+        if kneaded:
+            if leaf.ndim == 2:
+                out.append(knead_padded(leaf, bits=bits, ks=ks,
+                                        n_block=n_block))
+            else:
+                out.append(knead_stacked(leaf, bits=bits, ks=ks,
+                                         n_block=n_block))
             continue
         qt = quantize(leaf, bits=bits, axis=-1, reduce_axes=(-2,))
         scale = qt.scale  # [..., 1, N] per (stack..., out-channel)
@@ -58,10 +89,14 @@ def knead_params(params: PyTree, bits: int = 8,
 
 
 def serving_bytes(params: PyTree) -> int:
-    """HBM bytes of a serving param tree (bf16 floats, intN codes)."""
+    """HBM bytes of a serving param tree (bf16 floats, intN codes, or the
+    packed kneaded format incl. schedule metadata)."""
     total = 0
-    for leaf in jax.tree.leaves(params):
-        if hasattr(leaf, "dtype") and hasattr(leaf, "size"):
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, KneadedWeight)):
+        if isinstance(leaf, KneadedWeight):
+            total += leaf.packed_bytes()
+        elif hasattr(leaf, "dtype") and hasattr(leaf, "size"):
             itemsize = jnp.dtype(leaf.dtype).itemsize
             if jnp.issubdtype(leaf.dtype, jnp.floating):
                 itemsize = 2     # floats serve as bf16
@@ -74,15 +109,44 @@ class ServingConfig:
     max_len: int = 512
     temperature: float = 0.0      # 0 => greedy
     quant_bits: int = 0           # 0 => bf16, else 8 or 4
+    # Serving execution path:
+    #   "quant"  — the quantized-matmul form above (quant_bits selects width)
+    #   "float"  — original float params, plain bf16 matmuls
+    #   "int" | "planes" | "pallas" — knead every projection to the bit-plane
+    #            form and run SAC through that path ("pallas" = the
+    #            schedule-compacted kernel with the decode-GEMV fast path;
+    #            "planes" = its bit-exact oracle; "int" = one integer-code
+    #            matmul, the fast CPU reference).  Kneading width is
+    #            quant_bits (default 8 when 0).
+    impl: str = "quant"
+    knead_ks: int = 256           # kneading stride == kernel K tile
+    knead_n_block: int = 128      # kernel N tile / schedule granularity
+    knead_min_dim: int = 128      # skip projections smaller than this
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree,
                  scfg: ServingConfig = ServingConfig()):
-        self.cfg, self.scfg = cfg, scfg
+        if scfg.impl not in ("quant",) + SAC_IMPLS:
+            raise ValueError(f"impl must be 'quant' or one of {SAC_IMPLS}, "
+                             f"got {scfg.impl!r}")
+        self.scfg = scfg
+        if scfg.impl in ("quant", "float"):
+            self.cfg = cfg
+            self.params = (knead_params(params, bits=scfg.quant_bits,
+                                        min_dim=scfg.knead_min_dim)
+                           if scfg.impl == "quant" and scfg.quant_bits
+                           else params)
+        else:
+            # kneaded serving: the model dispatches every KneadedWeight
+            # matmul through the configured SAC path
+            self.cfg = dataclasses.replace(cfg, sac_impl=scfg.impl)
+            self.params = knead_params(
+                params, bits=scfg.quant_bits or 8,
+                min_dim=scfg.knead_min_dim, kneaded=True,
+                ks=scfg.knead_ks, n_block=scfg.knead_n_block)
+        cfg = self.cfg
         self.model = LanguageModel(cfg)
-        self.params = (knead_params(params, bits=scfg.quant_bits)
-                       if scfg.quant_bits else params)
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(3,))
 

@@ -58,6 +58,16 @@ VMEM budget per step (bm=bn=256, bk=512, B=8):
 names one plane per item, cutting the staged plane footprint (B-1)x.)
 MXU alignment: bm, bn multiples of 128; bk multiple of 256 (>= 8 sublanes of
 packed words after the x32 unpack).
+
+Decode / GEMV regime (LM serving, M = batch, often 1): the same kernel runs
+with ``bm`` shrunk to the 8-row f32 sublane floor — the ops-layer
+``_pad_activations`` rounds M up to a multiple of 8 and caps the M block at
+that, so a one-token decode step is a single M-step grid whose A tile is
+8 x bk instead of a 97%-padding 256-row slab.  The work-list walk, segment
+scratch indexing, and epilogue are identical to the streamed prefill grid;
+only the block shape changes, so decode output stays bit-exact against the
+planes oracle (and therefore against prefill logits for the same row).
+``bm`` must stay a multiple of 8 (sublane floor) — asserted below.
 """
 from __future__ import annotations
 
@@ -154,6 +164,7 @@ def sac_matmul_pallas_call(
     """Raw pallas_call wrapper (shapes must already be tile-aligned)."""
     m, k = a.shape
     n = planes.shape[-1]
+    assert bm % 8 == 0, f"bm={bm} must be a multiple of the 8-row sublane floor"
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
     assert schedule.nk == k // bk and schedule.n_tiles == n // bn, (
         schedule.nk, schedule.n_tiles, k // bk, n // bn)

@@ -81,18 +81,39 @@ def sac_matmul_pallas(
     return out[:m]
 
 
+def m_block(m: int, bm: int = 256) -> int:
+    """Effective M block for an M-row launch — the decode/GEMV fast path:
+    M rounded up to the 8-row f32 sublane floor, capped at ``bm``.  Shared
+    with the planes oracle (``core.sac``), which replays the kernel at the
+    same padded M so odd-M launches stay bit-comparable (XLA CPU picks
+    different dense-matmul micro-kernels for e.g. M=7 vs M=8 at wide N —
+    the same reduction-order sensitivity docs/DESIGN.md §5 records for
+    forced host devices)."""
+    return min(bm, max(8, -(-m // 8) * 8))
+
+
 def _pad_activations(a: jax.Array, kw, bm: int):
     """The M/K padding policy shared by the unsharded and sharded entry
     points: accept logical-K activations (zero-pad to the stored dim — the
     padded rows meet all-zero weight rows the schedule never dispatches)
-    and round M up to the effective block size."""
+    and round M up to the effective block size.
+
+    The M-block shrinks to fit tiny batches — the decode/GEMV fast path:
+    ``bm_eff = min(bm, M rounded up to the 8-row f32 sublane floor)``, so an
+    M=1 decode step pads one row to 8 and runs a single M-step instead of
+    padding to the full 256-row streaming block (31/32 of every A-tile DMA
+    and MXU pass would be padding).  Prefill and conv calls (M >= bm) keep
+    the full streamed grid.  ``bm_eff`` is always a multiple of 8, so
+    mid-size M (e.g. 12) pads to an aligned single block rather than
+    running a misaligned one.
+    """
     m, k = a.shape
     if k != kw.k:
         if k != kw.logical_k:
             raise ValueError(f"activation K {k} matches neither stored "
                              f"{kw.k} nor logical {kw.logical_k}")
         a = jnp.pad(a, ((0, 0), (0, kw.k - k)))
-    bm_eff = min(bm, max(8, m))
+    bm_eff = m_block(m, bm)
     pad = (-m) % bm_eff
     if pad:
         a = jnp.pad(a, ((0, pad), (0, 0)))

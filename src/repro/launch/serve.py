@@ -4,6 +4,9 @@
 trains nothing: initializes (or restores) params, kneads them to the
 requested precision, and serves a batch of synthetic prompts — the
 end-to-end demonstration of the paper's technique as a serving feature.
+``--impl pallas`` serves through the fully-kneaded bit-plane path (the SAC
+kernel's decode-GEMV fast path, docs/DESIGN.md §7); the default "quant"
+keeps the integer-matmul form selected by ``--quant``.
 """
 from __future__ import annotations
 
@@ -15,6 +18,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--quant", type=int, default=0, choices=[0, 8, 4])
+    ap.add_argument("--impl", default="quant",
+                    choices=["quant", "float", "int", "planes", "pallas"],
+                    help="serving path: quantized matmuls (quant) or the "
+                         "kneaded SAC forms (int/planes/pallas)")
+    ap.add_argument("--knead-min-dim", type=int, default=128,
+                    help="skip kneading projections smaller than this "
+                         "(lower it for smoke-size archs)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
@@ -47,9 +57,16 @@ def main():
 
     eng = ServingEngine(cfg, params, ServingConfig(
         max_len=args.prompt_len + args.tokens + 8,
-        quant_bits=args.quant, temperature=args.temperature))
+        quant_bits=args.quant, temperature=args.temperature,
+        impl=args.impl, knead_min_dim=args.knead_min_dim))
+    if args.impl in ("int", "planes", "pallas"):
+        precision = f"kneaded int{args.quant or 8}"   # engine default: 8
+    elif args.impl == "float":
+        precision = "bf16"
+    else:
+        precision = f"int{args.quant}" if args.quant else "bf16"
     print(f"serving params: {serving_bytes(eng.params)/1e6:.2f} MB "
-          f"(quant={args.quant or 'bf16'})")
+          f"(impl={args.impl}, {precision})")
 
     key = jax.random.PRNGKey(7)
     prompts = jax.random.randint(

@@ -107,9 +107,10 @@ def _qkv(p, x, kv_src, cfg: ModelConfig, dtype):
     b = x.shape[0]
     hd, nh, nkv = cfg.hd, cfg.num_heads, cfg.num_kv_heads
     g = nh // nkv
-    q = matmul_any(x, p["wq"], dtype).reshape(b, -1, nkv, g, hd)
-    k = matmul_any(kv_src, p["wk"], dtype).reshape(b, -1, nkv, hd)
-    v = matmul_any(kv_src, p["wv"], dtype).reshape(b, -1, nkv, hd)
+    impl = cfg.sac_impl
+    q = matmul_any(x, p["wq"], dtype, impl=impl).reshape(b, -1, nkv, g, hd)
+    k = matmul_any(kv_src, p["wk"], dtype, impl=impl).reshape(b, -1, nkv, hd)
+    v = matmul_any(kv_src, p["wv"], dtype, impl=impl).reshape(b, -1, nkv, hd)
     if cfg.qk_norm:
         q = layers.rms_head_norm(q, p["qnorm"])
         k = layers.rms_head_norm(k, p["knorm"])
@@ -174,7 +175,8 @@ def attn_apply(
             k_read, v_read = k_cache, v_cache
         out = layers.decode_attention(q, k_read, v_read, pos,
                                       window=cfg.window)
-        y = matmul_any(out.reshape(out.shape[0], 1, -1), p["wo"], dtype)
+        y = matmul_any(out.reshape(out.shape[0], 1, -1), p["wo"], dtype,
+                       impl=cfg.sac_impl)
         if quant_kv:
             return x + y, (k_cache, v_cache, k_sc, v_sc)
         return x + y, (k_cache, v_cache)
@@ -204,7 +206,7 @@ def attn_apply(
                             and _attn_shard_mode(cfg) is None
                             and pspec.current_mesh() is not None)
     b, s = out.shape[:2]
-    y = matmul_any(out.reshape(b, s, -1), p["wo"], dtype)
+    y = matmul_any(out.reshape(b, s, -1), p["wo"], dtype, impl=cfg.sac_impl)
     y = res_constrain(x + y, cfg)
     if return_kv:
         return y, (k, v)
@@ -236,19 +238,20 @@ def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
     return p
 
 
-def _ffn(h, p, activation: str, dtype) -> jax.Array:
+def _ffn(h, p, activation: str, dtype, impl: str = "int") -> jax.Array:
     if activation == "swiglu":
-        u = (jax.nn.silu(matmul_any(h, p["wi_gate"], dtype))
-             * matmul_any(h, p["wi_up"], dtype))
+        u = (jax.nn.silu(matmul_any(h, p["wi_gate"], dtype, impl=impl))
+             * matmul_any(h, p["wi_up"], dtype, impl=impl))
     else:
-        u = layers.activate(matmul_any(h, p["wi"], dtype), activation)
-    return matmul_any(u, p["wo"], dtype)
+        u = layers.activate(matmul_any(h, p["wi"], dtype, impl=impl),
+                            activation)
+    return matmul_any(u, p["wo"], dtype, impl=impl)
 
 
 def mlp_apply(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     dtype = jnp.dtype(cfg.dtype)
     h = sp_gather(layers.apply_norm(p["ln"], x, cfg.norm), cfg)
-    y = _ffn(h, p, cfg.activation, dtype)
+    y = _ffn(h, p, cfg.activation, dtype, impl=cfg.sac_impl)
     return res_constrain(x + y, cfg)
 
 
@@ -412,6 +415,7 @@ def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     y = y2.reshape(b, s, d)
     if cfg.dense_residual:
         dense_h = layers.apply_norm(p["dense"]["ln"], x, cfg.norm)
-        y = y + _ffn(dense_h, p["dense"], cfg.activation, dtype)
+        y = y + _ffn(dense_h, p["dense"], cfg.activation, dtype,
+                     impl=cfg.sac_impl)
     out = res_constrain(x + y.astype(x.dtype), cfg)
     return out, aux

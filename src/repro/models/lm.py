@@ -329,7 +329,8 @@ class LanguageModel:
     def logits(self, params, batch) -> jax.Array:
         h, _, _ = self._hidden(params, batch)
         return layers.matmul_any(h, self._unembed_w(params),
-                                 jnp.dtype(self.cfg.dtype))
+                                 jnp.dtype(self.cfg.dtype),
+                                 impl=self.cfg.sac_impl)
 
     def loss(self, params, batch, loss_chunk: int = 0) -> jax.Array:
         """Cross entropy + MoE aux.  The vocab matmul runs in bf16 with f32
@@ -374,7 +375,8 @@ class LanguageModel:
             cache = {"k": k8, "v": v8, "k_scale": ks, "v_scale": vs}
         last = h[:, -1]
         logits = layers.matmul_any(last, self._unembed_w(params),
-                                   jnp.dtype(self.cfg.dtype))
+                                   jnp.dtype(self.cfg.dtype),
+                                   impl=self.cfg.sac_impl)
         # pad KV caches to max length happens in inference.engine; here the
         # cache covers the prefilled prefix exactly.
         return logits, cache
@@ -599,5 +601,6 @@ class LanguageModel:
 
         h = layers.apply_norm(params["final_norm"], h, cfg.norm)
         logits = layers.matmul_any(h[:, 0], self._unembed_w(params),
-                                   jnp.dtype(cfg.dtype))
+                                   jnp.dtype(cfg.dtype),
+                                   impl=cfg.sac_impl)
         return logits, cache

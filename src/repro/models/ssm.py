@@ -137,7 +137,7 @@ def _mamba2_project(p, h, cfg: ModelConfig, dtype):
     di = cfg.ssm_expand * d
     n = cfg.ssm_state
     nh = di // cfg.ssm_head_dim
-    zxbcdt = matmul_any(h, p["in_proj"], dtype)
+    zxbcdt = matmul_any(h, p["in_proj"], dtype, impl=cfg.sac_impl)
     z, xc, b, c, dt = jnp.split(
         zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
@@ -175,7 +175,7 @@ def mamba2_apply(p, x: jax.Array, cfg: ModelConfig, *,
     y = y.reshape(bsz, -1, di)
     y = layers.apply_norm(p["out_norm"], y, "rmsnorm") * jax.nn.silu(
         z.astype(jnp.float32)).astype(y.dtype)
-    out = matmul_any(y, p["out_proj"], dtype)
+    out = matmul_any(y, p["out_proj"], dtype, impl=cfg.sac_impl)
     return x + out, new_cache
 
 
@@ -223,12 +223,15 @@ def mlstm_apply(p, x: jax.Array, cfg: ModelConfig, *, cache=None,
     nh = cfg.num_heads
     hd = di // nh
     h = layers.apply_norm(p["ln"], x, cfg.norm)
-    u2 = matmul_any(h, p["up"], dtype)
+    u2 = matmul_any(h, p["up"], dtype, impl=cfg.sac_impl)
     xm, z = jnp.split(u2, 2, axis=-1)
-    q = matmul_any(xm, p["wq"], dtype).reshape(bsz, l, nh, hd) / np.sqrt(hd)
-    k = matmul_any(xm, p["wk"], dtype).reshape(bsz, l, nh, hd) / np.sqrt(hd)
-    v = matmul_any(xm, p["wv"], dtype).reshape(bsz, l, nh, hd)
-    gif = matmul_any(xm, p["w_if"], jnp.float32)
+    impl = cfg.sac_impl
+    q = matmul_any(xm, p["wq"], dtype, impl=impl).reshape(bsz, l, nh,
+                                                         hd) / np.sqrt(hd)
+    k = matmul_any(xm, p["wk"], dtype, impl=impl).reshape(bsz, l, nh,
+                                                         hd) / np.sqrt(hd)
+    v = matmul_any(xm, p["wv"], dtype, impl=impl).reshape(bsz, l, nh, hd)
+    gif = matmul_any(xm, p["w_if"], jnp.float32, impl=impl)
     ig, fg = jnp.split(gif, 2, axis=-1)                    # [B, L, H]
     log_a = jax.nn.log_sigmoid(fg + p["f_bias"])
     i_lin = jnp.exp(jnp.clip(ig, -10.0, 10.0))
@@ -248,7 +251,7 @@ def mlstm_apply(p, x: jax.Array, cfg: ModelConfig, *, cache=None,
     y = y.reshape(bsz, -1, di).astype(dtype)
     y = layers.apply_norm(p["out_norm"], y, "rmsnorm") * jax.nn.silu(
         z.astype(jnp.float32)).astype(dtype)
-    out = matmul_any(y, p["down"], dtype)
+    out = matmul_any(y, p["down"], dtype, impl=impl)
     return x + out, h_final
 
 
@@ -303,7 +306,8 @@ def slstm_apply(p, x: jax.Array, cfg: ModelConfig, *, cache=None):
     dtype = jnp.dtype(cfg.dtype)
     bsz, l, d = x.shape
     h0 = layers.apply_norm(p["ln"], x, cfg.norm)
-    xt = matmul_any(h0, p["w_in"], jnp.float32)            # [B, L, 4d]
+    xt = matmul_any(h0, p["w_in"], jnp.float32,
+                    impl=cfg.sac_impl)                     # [B, L, 4d]
     if cache is None:
         state = tuple(jnp.zeros((bsz, d), jnp.float32) for _ in range(3))
     else:
@@ -320,7 +324,7 @@ def slstm_apply(p, x: jax.Array, cfg: ModelConfig, *, cache=None):
         state, ys = jax.lax.scan(step, state, jnp.moveaxis(xt, 1, 0))
         ys = jnp.moveaxis(ys, 0, 1)
     y = layers.apply_norm(p["out_norm"], ys.astype(dtype), "rmsnorm")
-    out = matmul_any(y, p["w_out"], dtype)
+    out = matmul_any(y, p["w_out"], dtype, impl=cfg.sac_impl)
     return x + out, state
 
 

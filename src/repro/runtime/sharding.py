@@ -175,10 +175,31 @@ def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 def tree_param_specs(params_shape: PyTree, mesh: Mesh,
                      mode: str = "tp") -> PyTree:
-    """Specs for a pytree of params (or matching optimizer state)."""
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    """Specs for a pytree of params (or matching optimizer state).
+
+    Kneaded serving leaves are handled as units, never field-by-field: a
+    :class:`~repro.core.kneading.KneadedWeight` replicates whole (its packed
+    planes/signs and schedule arrays are one indivisible kernel program —
+    the projection-name rules above would otherwise try to TP-shard the
+    uint32 plane words, splitting a work list from the tiles it indexes),
+    and a :class:`~repro.core.schedule.ShardedKneadedWeight` keeps its
+    leading shard axis on "model" (the placement
+    :func:`kneaded_param_specs` defines).
+    """
+    from repro.core.kneading import KneadedWeight
+    from repro.core.schedule import ShardedKneadedWeight
+
+    kinds = (KneadedWeight, ShardedKneadedWeight)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params_shape, is_leaf=lambda x: isinstance(x, kinds))
     specs = []
     for path, leaf in flat:
+        if isinstance(leaf, ShardedKneadedWeight):
+            specs.append(jax.tree.map(lambda _: P("model"), leaf))
+            continue
+        if isinstance(leaf, KneadedWeight):
+            specs.append(jax.tree.map(lambda _: P(), leaf))
+            continue
         keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
         p = "/".join(str(k) for k in keys)
         specs.append(param_spec(p, tuple(leaf.shape), mesh, mode))

@@ -11,6 +11,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import parity
 import pytest
 
 from repro.core import dequantize, quantize
@@ -27,7 +28,7 @@ def _wa(seed, m, k, n):
             jax.random.normal(kk[1], (m, k)))
 
 
-# ------------------------------------------------------------ pallas parity
+# ---------------------------------------- pallas parity (shared harness)
 
 # non-square M/K/N, K spanning one and multiple kernel tiles
 PARITY_SHAPES = [(24, 512, 128), (8, 1024, 256), (40, 768, 128)]
@@ -39,30 +40,24 @@ PARITY_SHAPES = [(24, 512, 128), (8, 1024, 256), (40, 768, 128)]
 def test_pallas_matches_planes_bit_exact(m, k, n, bits, ks):
     if k % ks:
         pytest.skip(f"K={k} not divisible by ks={ks}")
-    w, a = _wa(bits + ks + m, m, k, n)
-    kw = knead(w, bits=bits, ks=ks, n_block=128)
-    out_planes = sac_matmul(a, kw, impl="planes")
-    out_pallas = sac_matmul(a, kw, impl="pallas")
-    np.testing.assert_array_equal(np.asarray(out_pallas),
-                                  np.asarray(out_planes))
+    parity.run_case(bits + ks + m, m, k, n, bits=bits, ks=ks)
 
 
 @pytest.mark.parametrize("k0,n0", [(300, 100), (27, 64), (4800, 192)])
 def test_pallas_parity_padded_dims(k0, n0):
-    """Arbitrary (im2col-like) dims through knead_padded: parity still
-    bit-exact and the result matches the dequantized reference."""
-    w, a = _wa(k0, 8, k0, n0)
-    kw = knead_padded(w, bits=8, ks=256)
+    """Arbitrary (im2col-like) dims through knead_padded: the full impl
+    agreement matrix holds on the logical region and the padded dims are
+    tracked."""
+    a, w, kw = parity.knead_case(k0, 8, k0, n0)
     assert (kw.k, kw.n) == kneadable_dims(k0, n0, 256, 128)
     assert (kw.logical_k, kw.logical_n) == (k0, n0)
-    out_planes = sac_matmul(a, kw, impl="planes")
-    out_pallas = sac_matmul(a, kw, impl="pallas")
-    assert out_pallas.shape == (8, n0)
-    np.testing.assert_array_equal(np.asarray(out_pallas),
-                                  np.asarray(out_planes))
-    ref = a @ dequantize(quantize(w, bits=8, axis=-1))
-    np.testing.assert_allclose(np.asarray(out_pallas), np.asarray(ref),
-                               rtol=1e-5, atol=1e-4)
+    outs = parity.check_parity(a, w, kw)
+    assert outs["pallas"].shape == (8, n0)
+
+
+# padded/im2col-shaped sweep of the shared harness (hypothesis-gated)
+test_cnn_impl_parity_sweep = parity.make_sweep_test(
+    shapes=((8, 300, 100), (2, 27, 64), (8, 768, 192)))
 
 
 def test_occupancy_zero_segment_untouched():

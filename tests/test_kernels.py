@@ -1,17 +1,21 @@
 """Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
 
 Every Pallas kernel runs in interpret mode (CPU container; TPU is the
-target) and must match its ref.py to f32-matmul tolerance.
+target) and must match its ref.py to f32-matmul tolerance.  Cross-impl
+parity (float/int/planes/pallas agreement) comes from the shared
+``parity`` harness — the sweep below and the per-bit-width cases both run
+through it.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
+import parity
 import pytest
 
 from repro.core import knead, quantize
 from repro.kernels.kneaded_gemm.ops import kneaded_gemm
 from repro.kernels.kneaded_gemm.ref import kneaded_gemm_ref, pack_int4, unpack_int4
-from repro.kernels.sac_matmul.ops import sac_matmul_pallas
+from repro.kernels.sac_matmul.ops import _pad_activations, sac_matmul_pallas
 from repro.kernels.sac_matmul.ref import sac_matmul_ref
 
 
@@ -23,7 +27,7 @@ def _wa(seed, m, k, n, dtype=jnp.float32):
 
 
 SHAPES = [
-    (1, 256, 128),      # gemv-like (decode)
+    (1, 256, 128),      # gemv (decode batch 1)
     (8, 256, 256),
     (16, 512, 128),
     (128, 512, 256),    # multi-tile M
@@ -33,12 +37,55 @@ SHAPES = [
 @pytest.mark.parametrize("m,k,n", SHAPES)
 @pytest.mark.parametrize("bits", [4, 8, 9, 16])   # incl. odd width (paper §III.3)
 def test_sac_kernel_shapes_bits(m, k, n, bits):
-    w, a = _wa(bits * 100 + m, m, k, n)
-    kw = knead(w, bits=bits, ks=256, n_block=128)
-    ref = sac_matmul_ref(a, kw)
-    out = sac_matmul_pallas(a, kw, bm=min(128, max(8, m)))
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               rtol=1e-5, atol=1e-4)
+    parity.run_case(bits * 100 + m, m, k, n, bits=bits)
+
+
+# the canonical cross-impl sweep (hypothesis-gated), kernel-tile shape pool
+test_sac_impl_parity_sweep = parity.make_sweep_test()
+
+
+# ------------------------------------------------- decode-GEMV M edge cases
+
+@pytest.mark.parametrize("m", [1, 2, 7, 8, 9, 12])
+def test_sac_kernel_tiny_m_bit_exact(m):
+    """The M<8 clamp / small-M fast path must stay bit-exact vs the planes
+    oracle — decode serves M=batch rows, often 1."""
+    parity.run_case(m, m, 512, 128)
+
+
+def test_pad_activations_m_policy():
+    """bm_eff = min(bm, M rounded to the 8-row sublane floor): tiny M runs
+    one small block, mid M an aligned single block, large M the full
+    streamed grid; the padded row count is always a bm_eff multiple."""
+    w, _ = _wa(0, 1, 512, 128)
+    kw = knead(w, bits=8, ks=256, n_block=128)
+    cases = [  # (m, bm) -> expected bm_eff
+        (1, 256, 8), (7, 256, 8), (8, 256, 8),      # M<8 clamps to the floor
+        (9, 256, 16), (12, 256, 16),                # round up, single block
+        (40, 256, 40), (300, 256, 256),             # large M: streamed grid
+        (5, 8, 8),                                  # caller cap respected
+    ]
+    for m, bm, want in cases:
+        a = jnp.ones((m, 512))
+        padded, m_out, bm_eff = _pad_activations(a, kw, bm)
+        assert bm_eff == want, (m, bm, bm_eff, want)
+        assert m_out == m
+        assert padded.shape[0] % bm_eff == 0 and bm_eff % 8 == 0
+
+
+def test_pad_activations_logical_k():
+    """Logical-K activations zero-pad to the stored dim for any M, including
+    the M<8 clamp; mismatched K still raises."""
+    from repro.core.kneading import knead_padded
+
+    w = jax.random.normal(jax.random.PRNGKey(3), (300, 100)) * 0.05
+    kw = knead_padded(w, bits=8, ks=256)
+    for m in (1, 7, 8):
+        a = jnp.ones((m, 300))
+        padded, m_out, bm_eff = _pad_activations(a, kw, 256)
+        assert padded.shape[1] == kw.k and m_out == m and bm_eff == 8
+    with pytest.raises(ValueError, match="neither"):
+        _pad_activations(jnp.ones((1, 299)), kw, 256)
 
 
 @pytest.mark.parametrize("adtype", [jnp.float32, jnp.bfloat16])
