@@ -17,9 +17,13 @@ shards (docs/DESIGN.md §5) and reports per-shard executed work and the
 max/mean imbalance — deterministic, so ``shard_executed_max`` joins the CI
 regression gate.  ``decode_sweep`` runs the kernel's decode-GEMV fast path
 (docs/DESIGN.md §7) at batch 1/8/32 — tokens/s reported, the deterministic
-tile-dot counts and max-error gated.  ``serving`` runs the batched
-submit()/drain() front end on an AlexNet-16 engine and reports per-request
-latency (wall clock: reported, not gated).
+tile-dot counts and max-error gated.  ``sharded_decode_sweep`` runs the LM
+serving regime over sharded *stacked* schedules (docs/DESIGN.md §8):
+batch 1/8 x shards 1/2/4 on a two-layer column-sparse projection bank,
+per-shard work + imbalance reported, tile-dots/critical-path-load/max-err
+gated.  ``serving`` runs the batched submit()/drain() front end on an
+AlexNet-16 engine and reports per-request latency (wall clock: reported,
+not gated).
 
 ``--quick`` shrinks the raw-kernel shapes/bit sweeps to CI-smoke size (the
 AlexNet sweep is metadata-only and always runs); ``--json PATH`` writes the
@@ -257,6 +261,66 @@ def decode_sweep(quick: bool) -> List[BenchRow]:
     return rows
 
 
+def sharded_decode_sweep(quick: bool) -> List[BenchRow]:
+    """Sharded decode-GEMV rows: the LM serving regime over a model mesh.
+
+    A fixed-seed stacked [L, K, N] projection bank (two layers, whole
+    column blocks zeroed per layer so the shards see *unequal* compacted
+    work — the load-balance case the per-layer accounting exists for) is
+    kneaded per layer (``knead_stacked``), sharded at 1/2/4
+    (``shard_stacked_schedule``), and decoded through the scan-sliced
+    serial shard walk at batch 1/8 — the exact per-layer kernel programs
+    the mesh launches, minus the device transport, so the rows run on the
+    single-CPU CI container.  ``tokens_per_s`` is interpret-mode wall clock
+    (reported, not gated); the deterministic ``executed_tile_dots``,
+    ``shard_executed_max`` (critical-path load of the most-loaded device),
+    and ``max_err`` vs the unsharded stacked kernel (bit-exact: 0.0) join
+    the CI regression gate.
+    """
+    from repro.core.kneading import knead_stacked
+    from repro.core.sac import sac_matmul
+    from repro.core.schedule import shard_stacked_schedule
+
+    rows: List[BenchRow] = []
+    k, n = (256, 256) if quick else (1024, 512)
+    layers = 2
+    w = jax.random.normal(jax.random.PRNGKey(21), (layers, k, n)) * 0.02
+    # structured column sparsity, different per layer: layer 0 keeps the
+    # first half of its output channels, layer 1 the first three quarters
+    w = w.at[0, :, n // 2:].set(0.0)
+    w = w.at[1, :, (3 * n) // 4:].set(0.0)
+    stacked = knead_stacked(w, bits=8)
+
+    def scan_decode(a, kw_stacked):
+        def body(carry, kw_l):
+            return carry, sac_matmul(a, kw_l, impl="pallas")
+        return jax.lax.scan(body, 0, kw_stacked)[1]
+
+    for shards in (1, 2, 4):
+        ssk = shard_stacked_schedule(stacked, shards)
+        imb = ssk.imbalance()
+        for batch in (1, 8):
+            a = jax.random.normal(jax.random.PRNGKey(22), (batch, k))
+            us, out = timed(lambda: scan_decode(a, ssk), repeats=1)
+            ref = scan_decode(a, stacked)
+            err = float(jnp.max(jnp.abs(out - ref)))
+            tok_s = batch / (us * 1e-6)
+            met = {
+                "executed_tile_dots": ssk.total_work,
+                "dense_tile_dots": ssk.dense_work(),
+                "shard_executed_max": imb["max"],
+                "shard_imbalance": imb["imbalance"],
+                "max_layer_imbalance": imb.get("max_layer_imbalance", 1.0),
+                "max_err": err,
+                "tokens_per_s": tok_s,       # wall clock: not gated
+            }
+            rows.append((
+                f"sharded_decode_sweep/b{batch}@s{shards}", us,
+                f"tok_s={tok_s:.1f} shard_work={imb['shard_work']} "
+                f"imbalance={imb['imbalance']:.2f} max_err={err:.1e}", met))
+    return rows
+
+
 def serving_rows(quick: bool) -> List[BenchRow]:
     """Batched submit()/drain() front end: per-request latency on a kneaded
     AlexNet-16 engine (int path — the production CPU impl; wall clock, so
@@ -291,7 +355,8 @@ def serving_rows(quick: bool) -> List[BenchRow]:
 
 def run(quick: bool = False) -> List[BenchRow]:
     return (sac_rows(quick) + alexnet_sweep() + sharded_sweep()
-            + decode_sweep(quick) + serving_rows(quick))
+            + decode_sweep(quick) + sharded_decode_sweep(quick)
+            + serving_rows(quick))
 
 
 def main(argv: Optional[List[str]] = None) -> None:

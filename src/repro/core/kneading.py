@@ -32,12 +32,15 @@ import jax.numpy as jnp
 from repro.core import bitplanes
 from repro.core.quantization import QuantizedTensor, quantize
 from repro.core.schedule import (KneadedSchedule, ShardedKneadedWeight,
-                                 build_schedule, shard_schedule)
+                                 ShardedStackedKneadedWeight, build_schedule,
+                                 shard_schedule, shard_stacked_schedule)
 
 __all__ = [
     "KneadedWeight",
     "ShardedKneadedWeight",
+    "ShardedStackedKneadedWeight",
     "shard_schedule",
+    "shard_stacked_schedule",
     "knead",
     "knead_padded",
     "knead_stacked",
@@ -159,7 +162,11 @@ class KneadedWeight:
     def shard(self, mesh, axis: str = "model") -> ShardedKneadedWeight:
         """Partition this weight + schedule along N for a device mesh (one
         compacted work list per shard; see
-        :func:`repro.core.schedule.shard_schedule` / docs/DESIGN.md §5)."""
+        :func:`repro.core.schedule.shard_schedule` / docs/DESIGN.md §5).
+        A stacked [L, K, N] weight (:func:`knead_stacked`) shards per layer
+        into a :class:`ShardedStackedKneadedWeight` (docs/DESIGN.md §8)."""
+        if self.planes.ndim == 4:
+            return shard_stacked_schedule(self, mesh, axis=axis)
         return shard_schedule(self, mesh, axis=axis)
 
     def metadata_bytes(self) -> int:

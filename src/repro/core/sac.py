@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitplanes
-from repro.core.kneading import KneadedWeight, knead
+from repro.core.kneading import KneadedWeight, ShardedKneadedWeight, knead
 
 __all__ = ["SAC_IMPLS", "sac_matmul", "sac_matmul_planes", "sac_matmul_int",
            "TetrisLinear"]
@@ -95,6 +95,13 @@ def sac_matmul(
     impl="float" dequantizes the codes and runs one f32 matmul — the
     quantized-model reference the SAC paths must match (identical math to
     "int"; kept so the model-level dispatch matrix is closed under this op).
+
+    N-sharded weights (``ShardedKneadedWeight``, including per-layer
+    scan slices of a ``ShardedStackedKneadedWeight``) execute through the
+    Pallas kernel only — one launch per device of the serving mesh
+    installed via :func:`repro.runtime.sharding.serving_mesh`, or the
+    serial single-device shard walk when no mesh is installed (the parity
+    oracle; docs/DESIGN.md §8).
     """
     lead = a.shape[:-1]
     a2 = a.reshape(-1, a.shape[-1])
@@ -102,7 +109,19 @@ def sac_matmul(
         raise ValueError(
             f"activation K {a2.shape[1]} matches neither stored "
             f"{kw.k} nor logical {kw.logical_k}")
-    if impl == "pallas":
+    if isinstance(kw, ShardedKneadedWeight):
+        if impl != "pallas":
+            raise ValueError("sharded kneaded weights execute through the "
+                             f"Pallas kernel only, got impl={impl!r}")
+        if kw.planes.ndim == 5:
+            raise ValueError(
+                "a stacked sharded weight reached sac_matmul un-sliced — "
+                "scan over its layer axis (or index one layer) first")
+        from repro.kernels.sac_matmul.ops import sac_matmul_pallas_sharded
+        from repro.runtime.sharding import current_serving_mesh
+        mesh, axis = current_serving_mesh()
+        out = sac_matmul_pallas_sharded(a2, kw, mesh, axis)
+    elif impl == "pallas":
         # the ops-level wrapper owns the logical-K zero-pad policy
         from repro.kernels.sac_matmul.ops import sac_matmul_pallas
         out = sac_matmul_pallas(a2, kw)

@@ -34,6 +34,15 @@ tiles' counts), not its dense tile count — the SCNN/Bit-Tactical principle
 of distributing the compacted work list rather than the dense iteration
 space — and :meth:`ShardedKneadedWeight.imbalance` reports how unevenly the
 occupancy landed.
+
+**Stacked sharding** (:func:`shard_stacked_schedule`, docs/DESIGN.md §8):
+the LM stacks scan-layer weights as [L, K, N] with per-layer schedules
+(``knead_stacked``); sharding applies the same N partition to every layer,
+producing a :class:`ShardedStackedKneadedWeight` whose arrays carry
+``[L, S, ...]`` axes — layer outermost so ``jax.lax.scan`` slices out each
+layer's per-shard slabs, shard axis next for mesh placement.  Per-layer,
+per-shard work totals are static (``layer_shard_work``) so load reports
+need no device round-trips.
 """
 from __future__ import annotations
 
@@ -47,8 +56,9 @@ import numpy as np
 if TYPE_CHECKING:  # avoid the import cycle (kneading imports this module)
     from repro.core.kneading import KneadedWeight
 
-__all__ = ["KneadedSchedule", "ShardedKneadedWeight", "build_schedule",
-           "replay_schedule", "shard_schedule"]
+__all__ = ["KneadedSchedule", "ShardedKneadedWeight",
+           "ShardedStackedKneadedWeight", "build_schedule",
+           "replay_schedule", "shard_schedule", "shard_stacked_schedule"]
 
 
 @jax.tree_util.register_dataclass
@@ -372,4 +382,169 @@ def shard_schedule(kw: "KneadedWeight",
         bits=kw.bits, ks=kw.ks, n_block=kw.n_block,
         k=kw.k, n=n_pad,
         k_orig=kw.k_orig, n_orig=kw.n_orig or (kw.n if pad_tiles else 0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stacked (scan-layer) N-sharded schedules (docs/DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedStackedKneadedWeight(ShardedKneadedWeight):
+    """A stacked [L, K, N] kneaded weight sharded along N, per layer.
+
+    Every array field of :class:`ShardedKneadedWeight` gains a leading
+    *layer* axis in front of the shard axis: ``planes [L, S, B-1, K/32,
+    n/S]``, ``counts [L, S, T]``, work lists ``[L, S, T, num_work]``, and so
+    on.  The layer axis stays outermost because ``jax.lax.scan`` slices
+    leading axes only — scanning this pytree as ``xs`` hands the body layer
+    *l*'s arrays with their leading shard axis intact, i.e. exactly the
+    per-layer sharded weight ``shard_schedule(knead_padded(w[l]))`` would
+    build (up to the work dim, padded to the cross-layer/cross-shard max so
+    every layer and every shard runs the same kernel program).  The shard
+    axis (axis 1 here; axis 0 after the scan slice) is the one
+    ``runtime.sharding`` places on the mesh.
+
+    Statics: ``num_layers`` is the stack extent; ``layer_shard_work[l][s]``
+    the occupancy-nonzero count layer *l* dispatches on shard *s* (each row
+    partitions that layer's unsharded ``total_work``); the inherited
+    ``shard_work[s]`` aggregates over layers — the per-device load of one
+    full forward pass through the stack.
+    """
+
+    num_layers: int = dataclasses.field(metadata=dict(static=True), default=0)
+    layer_shard_work: Tuple[Tuple[int, ...], ...] = dataclasses.field(
+        metadata=dict(static=True), default=())
+
+    def layer_schedule_for(self, layer: int, s: int) -> KneadedSchedule:
+        """Layer ``layer``'s compacted schedule on shard ``s`` (host-side
+        full object; a scan-sliced per-layer object uses the inherited
+        :meth:`ShardedKneadedWeight.schedule_for` instead)."""
+        return KneadedSchedule(
+            counts=self.counts[layer, s],
+            plane_ids=self.plane_ids[layer, s],
+            ktile_ids=self.ktile_ids[layer, s],
+            num_work=self.num_work,
+            total_work=self.layer_shard_work[layer][s],
+            nk=self.nk,
+            n_tiles=self.tiles_per_shard,
+        )
+
+    def dense_work(self) -> int:
+        """Dense-grid work items across all layers and shards (stack-level
+        accounting, matching the stacked ``total_work`` convention)."""
+        return self.num_layers * super().dense_work()
+
+    def dense_bf16_bytes(self) -> int:
+        return self.num_layers * super().dense_bf16_bytes()
+
+    def layer_imbalance(self, layer: int) -> dict:
+        """Per-shard load report for one layer (same keys as
+        :meth:`ShardedKneadedWeight.imbalance`)."""
+        work = list(self.layer_shard_work[layer])
+        mean = sum(work) / max(1, len(work))
+        return {
+            "shard_work": work,
+            "max": max(work) if work else 0,
+            "mean": mean,
+            "imbalance": (max(work) / mean) if mean else 1.0,
+        }
+
+    def imbalance(self) -> dict:
+        """Aggregate per-shard load over the whole stack, plus the worst
+        single layer's skew (a layer whose occupancy lands on one shard
+        serializes that layer even if the stack totals balance)."""
+        rep = super().imbalance()
+        if self.layer_shard_work:
+            rep["max_layer_imbalance"] = max(
+                self.layer_imbalance(layer)["imbalance"]
+                for layer in range(self.num_layers))
+        return rep
+
+
+def shard_stacked_schedule(kw: "KneadedWeight",
+                           mesh: Union[int, jax.sharding.Mesh],
+                           axis: str = "model") -> ShardedStackedKneadedWeight:
+    """Partition a stacked [L, K, N] kneaded weight along N for a mesh.
+
+    ``kw`` is a stacked weight from :func:`repro.core.kneading.knead_stacked`
+    (leading layer axis on every array, schedule ``counts [L, NN]`` / work
+    lists ``[L, NN, num_work]``).  Every layer's per-N-tile work lists are
+    partitioned exactly as :func:`shard_schedule` partitions one layer's —
+    shard *s* of layer *l* takes the same contiguous slab of N-tiles with
+    those tiles' compacted items, k-major order untouched, so the sharded
+    stack is bit-exact against the unsharded one layer by layer.  All layers
+    share the (already cross-layer-padded) ``num_work``, so the whole stack
+    runs one kernel program.
+
+    Indivisible N-tile counts append all-empty padding tiles per layer (the
+    same tiles on every layer — the stack shares [K, N]); padded columns sit
+    past ``logical_n`` where callers already slice.
+
+    Args:
+      kw:   a *stacked* :class:`repro.core.kneading.KneadedWeight`.
+      mesh: target mesh or plain int shard count (host-side analysis).
+      axis: mesh axis name for the shard dimension.
+    Returns:
+      A :class:`ShardedStackedKneadedWeight` with axes ``[L, S, ...]`` —
+      scan-sliceable per layer, shard axis placed by
+      ``runtime.sharding.kneaded_shardings``.
+    """
+    sched = kw.schedule
+    if kw.planes.ndim != 4:
+        raise ValueError("shard_stacked_schedule expects a stacked kneaded "
+                         f"weight (planes [L, B-1, K/32, N]), got planes "
+                         f"shape {tuple(kw.planes.shape)}")
+    num = _mesh_axis_size(mesh, axis)
+    if num < 1:
+        raise ValueError(f"shard count must be >= 1, got {num}")
+    layers = kw.planes.shape[0]
+    nn = sched.n_tiles
+    tps = -(-nn // num)                       # tiles per shard (ceil)
+    pad_tiles = tps * num - nn
+    pad_cols = pad_tiles * kw.n_block
+    n_pad = kw.n + pad_cols
+
+    planes, signs = kw.planes, kw.signs                  # [L, B-1, K/32, N]
+    scale = jnp.broadcast_to(
+        jnp.asarray(kw.scale, jnp.float32).reshape(layers, 1, -1),
+        (layers, 1, kw.n))
+    counts = sched.counts                                 # [L, NN]
+    plane_ids, ktile_ids = sched.plane_ids, sched.ktile_ids
+    if pad_tiles:
+        planes = jnp.pad(planes, ((0, 0),) * 3 + ((0, pad_cols),))
+        signs = jnp.pad(signs, ((0, 0),) * 2 + ((0, pad_cols),))
+        scale = jnp.pad(scale, ((0, 0), (0, 0), (0, pad_cols)),
+                        constant_values=1.0)
+        counts = jnp.pad(counts, ((0, 0), (0, pad_tiles)))
+        plane_ids = jnp.pad(plane_ids, ((0, 0), (0, pad_tiles), (0, 0)))
+        ktile_ids = jnp.pad(ktile_ids, ((0, 0), (0, pad_tiles), (0, 0)))
+
+    shard_n = n_pad // num
+    nb = kw.bits - 1
+    kwords = kw.k // 32
+    per_layer_work = np.asarray(counts).reshape(layers, num, tps).sum(axis=2)
+    layer_shard_work = tuple(tuple(int(c) for c in row)
+                             for row in per_layer_work)
+    shard_work = tuple(int(c) for c in per_layer_work.sum(axis=0))
+    return ShardedStackedKneadedWeight(
+        planes=planes.reshape(layers, nb, kwords, num, shard_n)
+                     .transpose(0, 3, 1, 2, 4),
+        signs=signs.reshape(layers, kwords, num, shard_n)
+                   .transpose(0, 2, 1, 3),
+        scale=scale.reshape(layers, 1, num, shard_n).transpose(0, 2, 1, 3),
+        counts=counts.reshape(layers, num, tps),
+        plane_ids=plane_ids.reshape(layers, num, tps, sched.num_work),
+        ktile_ids=ktile_ids.reshape(layers, num, tps, sched.num_work),
+        num_shards=num,
+        num_work=sched.num_work,
+        nk=sched.nk,
+        tiles_per_shard=tps,
+        shard_work=shard_work,
+        bits=kw.bits, ks=kw.ks, n_block=kw.n_block,
+        k=kw.k, n=n_pad,
+        k_orig=kw.k_orig, n_orig=kw.n_orig or (kw.n if pad_tiles else 0),
+        num_layers=layers,
+        layer_shard_work=layer_shard_work,
     )

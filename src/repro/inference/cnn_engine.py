@@ -34,19 +34,18 @@ Scaling (docs/DESIGN.md §5):
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import time
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.kneading import (KneadedWeight, ShardedKneadedWeight,
                                  kneaded_codes, kneading_ratio)
 from repro.core.quantization import quantize
 from repro.core.sac import SAC_IMPLS
+from repro.inference.frontend import RequestFrontEnd, validate_buckets
 from repro.models import cnn
 
 PyTree = Any
@@ -80,7 +79,7 @@ class CNNServingConfig:
     stats_window: int = 4096
 
 
-class CNNServingEngine:
+class CNNServingEngine(RequestFrontEnd):
     """Classify images through a fully-kneaded CNN forward pass."""
 
     def __init__(self, cfg: cnn.CNNConfig, params: PyTree,
@@ -91,10 +90,7 @@ class CNNServingEngine:
         if scfg.shards > 1 and scfg.impl != "pallas":
             raise ValueError("sharded serving runs the Pallas kernel; "
                              f"impl={scfg.impl!r} is single-device only")
-        if tuple(scfg.buckets) != tuple(sorted(scfg.buckets)) or \
-                not all(b > 0 for b in scfg.buckets):
-            raise ValueError(f"buckets must be positive ascending, "
-                             f"got {scfg.buckets}")
+        validate_buckets(scfg.buckets)
         self.cfg, self.scfg = cfg, scfg
         self.mesh = None
         if scfg.impl == "float":
@@ -119,11 +115,7 @@ class CNNServingEngine:
                              shard_axis=scfg.mesh_axis)
 
         self._fwd = jax.jit(fwd) if scfg.jit else fwd
-        # batched front end state
-        self._next_id = 0
-        self._pending: List[Tuple[int, jax.Array, float]] = []
-        self._request_log: Deque[Dict[str, Any]] = collections.deque(
-            maxlen=scfg.stats_window)
+        self._init_front_end(scfg.stats_window)
 
     def logits(self, x: jax.Array) -> jax.Array:
         """x [B, H, W, C] -> logits [B, num_classes]."""
@@ -173,29 +165,13 @@ class CNNServingEngine:
             done = time.perf_counter()
             for i, (rid, _, t0) in enumerate(chunk):
                 results[rid] = out[i]
-                self._request_log.append({
-                    "id": rid,
-                    "latency_ms": (done - t0) * 1e3,
-                    "bucket": bucket,
-                    "batch_fill": b / bucket,
-                })
+                self._log_request(
+                    id=rid,
+                    latency_ms=(done - t0) * 1e3,
+                    bucket=bucket,
+                    batch_fill=b / bucket,
+                )
         return results
-
-    def latency_stats(self) -> Dict[str, float]:
-        """Per-request latency distribution over the last ``stats_window``
-        drained requests (a sliding window, bounded by construction)."""
-        lat = np.array([r["latency_ms"] for r in self._request_log])
-        if lat.size == 0:
-            return {"requests": 0}
-        fill = np.array([r["batch_fill"] for r in self._request_log])
-        return {
-            "requests": int(lat.size),
-            "mean_ms": float(lat.mean()),
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p95_ms": float(np.percentile(lat, 95)),
-            "max_ms": float(lat.max()),
-            "mean_batch_fill": float(fill.mean()),
-        }
 
     # ------------------------------------------------------------- reporting
 

@@ -1,27 +1,43 @@
 """Batched serving engine with the Tetris kneaded-weight path.
 
 ``ServingEngine`` owns: prefill -> padded KV cache -> batched greedy/sampled
-decode.  ``knead_params`` converts a trained float checkpoint into a serving
-representation — either the quantized-matmul form (QuantizedTensor int8 /
-PackedInt4: integer codes with a single epilogue scale) or, with
-``kneaded=True``, the full kneaded bit-plane form of docs/DESIGN.md §7:
-every ``_KNEADABLE`` projection becomes a :class:`KneadedWeight` with a
-compacted :class:`~repro.core.schedule.KneadedSchedule`, stacked [L, K, N]
-scan-layer weights kneaded per layer with a leading schedule axis
+decode, plus the ``submit()``/``drain()`` request front end (padding-bucket
+micro-batches, per-request latency).  ``knead_params`` converts a trained
+float checkpoint into a serving representation — either the quantized-matmul
+form (QuantizedTensor int8 / PackedInt4: integer codes with a single
+epilogue scale) or, with ``kneaded=True``, the full kneaded bit-plane form
+of docs/DESIGN.md §7: every ``_KNEADABLE`` projection becomes a
+:class:`KneadedWeight` with a compacted
+:class:`~repro.core.schedule.KneadedSchedule`, stacked [L, K, N] scan-layer
+weights kneaded per layer with a leading schedule axis
 (:func:`repro.core.kneading.knead_stacked`), so attention and MLP
 projections dispatch through ``sac_matmul`` — and with ``impl="pallas"``
 through the schedule-walking SAC kernel's decode-GEMV fast path.
+
+``shards=N`` (docs/DESIGN.md §8) additionally partitions every kneaded
+projection's compacted work lists along the out-channel dim over an
+N-device "model" mesh: stacked scan-layer weights become
+:class:`~repro.core.schedule.ShardedStackedKneadedWeight` (per-layer
+per-shard work lists, scan-sliceable), [K, N] leaves become
+:class:`~repro.core.schedule.ShardedKneadedWeight`, and every sharded
+matmul launches one Pallas call per device under ``jax.shard_map`` — the
+same engine API, now tensor-parallel, bit-exact against one device.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Dict, Optional
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.kneading import KneadedWeight, knead_padded, knead_stacked
+from repro.inference.frontend import RequestFrontEnd, validate_buckets
+from repro.core.kneading import (KneadedWeight, ShardedKneadedWeight,
+                                 knead_padded, knead_stacked,
+                                 shard_schedule, shard_stacked_schedule)
 from repro.core.quantization import quantize
 from repro.core.sac import SAC_IMPLS
 from repro.kernels.kneaded_gemm.ref import pack_int4
@@ -36,7 +52,7 @@ _KNEADABLE = ("wq", "wk", "wv", "wo", "wi", "wi_gate", "wi_up", "up",
 
 def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
                  *, kneaded: bool = False, ks: int = 256,
-                 n_block: int = 128) -> PyTree:
+                 n_block: int = 128, shards: int = 0) -> PyTree:
     """Convert every kneadable projection leaf to its serving form.
 
     Default (``kneaded=False``): quantize to intN codes — bits=8 ->
@@ -50,7 +66,18 @@ def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
     leading layer axis, sliced out by the model's layer scans).  Leaves with
     more than one stack dim (MoE expert banks — executed inside shard_map)
     stay float; ``min_dim`` gates tiny projections either way.
+
+    ``shards=N`` (with ``kneaded=True``) then partitions every kneaded
+    leaf's work lists along N — stacked leaves per layer
+    (:func:`~repro.core.kneading.shard_stacked_schedule`), [K, N] leaves via
+    :func:`~repro.core.kneading.shard_schedule` — producing the mesh-ready
+    sharded serving tree of docs/DESIGN.md §8 (a plain int here: placement
+    happens at ``device_put`` time via
+    ``runtime.sharding.kneaded_shardings``).
     """
+    if shards > 1 and not kneaded:
+        raise ValueError("shards applies to the kneaded serving form only "
+                         "(pass kneaded=True)")
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
@@ -69,11 +96,14 @@ def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
             continue
         if kneaded:
             if leaf.ndim == 2:
-                out.append(knead_padded(leaf, bits=bits, ks=ks,
-                                        n_block=n_block))
+                kw = knead_padded(leaf, bits=bits, ks=ks, n_block=n_block)
+                if shards > 1:
+                    kw = shard_schedule(kw, shards)
             else:
-                out.append(knead_stacked(leaf, bits=bits, ks=ks,
-                                         n_block=n_block))
+                kw = knead_stacked(leaf, bits=bits, ks=ks, n_block=n_block)
+                if shards > 1:
+                    kw = shard_stacked_schedule(kw, shards)
+            out.append(kw)
             continue
         qt = quantize(leaf, bits=bits, axis=-1, reduce_axes=(-2,))
         scale = qt.scale  # [..., 1, N] per (stack..., out-channel)
@@ -90,11 +120,13 @@ def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
 
 def serving_bytes(params: PyTree) -> int:
     """HBM bytes of a serving param tree (bf16 floats, intN codes, or the
-    packed kneaded format incl. schedule metadata)."""
+    packed kneaded format incl. schedule metadata; sharded leaves count
+    across all shards)."""
     total = 0
+    kinds = (KneadedWeight, ShardedKneadedWeight)
     for leaf in jax.tree.leaves(
-            params, is_leaf=lambda x: isinstance(x, KneadedWeight)):
-        if isinstance(leaf, KneadedWeight):
+            params, is_leaf=lambda x: isinstance(x, kinds)):
+        if isinstance(leaf, kinds):
             total += leaf.packed_bytes()
         elif hasattr(leaf, "dtype") and hasattr(leaf, "size"):
             itemsize = jnp.dtype(leaf.dtype).itemsize
@@ -122,15 +154,30 @@ class ServingConfig:
     knead_ks: int = 256           # kneading stride == kernel K tile
     knead_n_block: int = 128      # kernel N tile / schedule granularity
     knead_min_dim: int = 128      # skip projections smaller than this
+    # Shard every kneaded projection's compacted schedule along its
+    # out-channel dim over this many "model"-mesh devices (0/1 = single
+    # device).  Requires impl="pallas" — sharded work lists are a kernel-
+    # path artifact (docs/DESIGN.md §8).
+    shards: int = 0
+    mesh_axis: str = "model"
+    # submit()/drain() batching: micro-batch padding buckets (ascending)
+    # and the sliding per-request latency log window.
+    buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    stats_window: int = 4096
 
 
-class ServingEngine:
+class ServingEngine(RequestFrontEnd):
     def __init__(self, cfg: ModelConfig, params: PyTree,
                  scfg: ServingConfig = ServingConfig()):
         if scfg.impl not in ("quant",) + SAC_IMPLS:
             raise ValueError(f"impl must be 'quant' or one of {SAC_IMPLS}, "
                              f"got {scfg.impl!r}")
+        if scfg.shards > 1 and scfg.impl != "pallas":
+            raise ValueError("sharded serving runs the Pallas kernel; "
+                             f"impl={scfg.impl!r} is single-device only")
+        validate_buckets(scfg.buckets)
         self.scfg = scfg
+        self.mesh = None
         if scfg.impl in ("quant", "float"):
             self.cfg = cfg
             self.params = (knead_params(params, bits=scfg.quant_bits,
@@ -144,28 +191,65 @@ class ServingEngine:
             self.params = knead_params(
                 params, bits=scfg.quant_bits or 8,
                 min_dim=scfg.knead_min_dim, kneaded=True,
-                ks=scfg.knead_ks, n_block=scfg.knead_n_block)
+                ks=scfg.knead_ks, n_block=scfg.knead_n_block,
+                shards=scfg.shards)
+            if scfg.shards > 1:
+                from repro.launch.mesh import make_model_mesh
+                from repro.runtime.sharding import kneaded_shardings
+                self.mesh = make_model_mesh(scfg.shards)
+                self.params = jax.device_put(
+                    self.params, kneaded_shardings(self.params, self.mesh,
+                                                   axis=scfg.mesh_axis))
         cfg = self.cfg
         self.model = LanguageModel(cfg)
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(3,))
+        self._init_front_end(scfg.stats_window)
+
+    def _mesh_ctx(self):
+        """Serving-mesh context the sharded kneaded matmuls dispatch under
+        (a no-op for unsharded engines; installed around every model call so
+        jit traces capture the mesh — docs/DESIGN.md §8)."""
+        import contextlib
+
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.runtime.sharding import serving_mesh
+        return serving_mesh(self.mesh, self.scfg.mesh_axis)
 
     def _pad_cache(self, cache: PyTree, cur: int) -> PyTree:
+        """Pad the prefill cache's sequence axes out to ``max_len``.
+
+        Structure-aware, keyed on the cache dict the model families build
+        (models/lm.py): self-attention KV stores ("k"/"v", seq axis at -3)
+        zero-pad; their int8-quantization scales ("k_scale"/"v_scale", seq
+        at -2) pad with 1.0.  Everything else — cross-attention KV (fixed
+        encoder/image extent) and SSM/conv states ("conv"/"ssm"/"mlstm"/
+        "slstm", no seq axis at all) — is returned untouched.  Keying on
+        names rather than sniffing shapes matters: a hybrid SSM state
+        [L, B, H, p, n] whose head count H happens to equal the prompt
+        length used to match the old "-3 axis == prefill len" heuristic and
+        got its *heads* padded to max_len, breaking every zamba2 decode
+        (the ROADMAP's hybrid-decode bug; regression-tested in
+        tests/test_lm_kneaded.py).
+        """
         pad_to = self.scfg.max_len
 
-        def pad(x):
-            # attention caches: seq axis at -3; scale arrays: seq at -2
-            if x.ndim >= 4 and x.shape[-3] == cur:
-                pads = [(0, 0)] * x.ndim
-                pads[-3] = (0, pad_to - cur)
-                return jnp.pad(x, pads)
-            if (x.ndim >= 3 and x.shape[-2] == cur
-                    and x.dtype == jnp.float32):
-                pads = [(0, 0)] * x.ndim
-                pads[-2] = (0, pad_to - cur)
-                return jnp.pad(x, pads, constant_values=1.0)
-            return x
-        return jax.tree.map(pad, cache)
+        def pad_axis(x, axis, value=0.0):
+            if x.shape[axis] != cur or pad_to == cur:
+                return x
+            pads = [(0, 0)] * x.ndim
+            pads[axis] = (0, pad_to - cur)
+            return jnp.pad(x, pads, constant_values=value)
+
+        out = dict(cache)
+        for key in ("k", "v"):
+            if key in out:
+                out[key] = pad_axis(out[key], -3)
+        for key in ("k_scale", "v_scale"):
+            if key in out:
+                out[key] = pad_axis(out[key], -2, value=1.0)
+        return out
 
     def generate(self, batch: Dict[str, jax.Array], num_tokens: int,
                  key: Optional[jax.Array] = None) -> jax.Array:
@@ -174,19 +258,20 @@ class ServingEngine:
         tokens = batch["tokens"]
         b, s = tokens.shape
         assert s + num_tokens <= self.scfg.max_len
-        logits, cache = self._prefill(self.params, batch)
-        cache = self._pad_cache(cache, s)
-        outs = []
-        key = key if key is not None else jax.random.PRNGKey(0)
-        tok = self._select(logits, key)
-        for i in range(num_tokens):
-            outs.append(tok)
-            pos = jnp.full((b,), s + i, jnp.int32)
-            logits, cache = self._decode(self.params, tok[:, None], pos,
-                                         cache)
-            key, sub = jax.random.split(key)
-            tok = self._select(logits, sub)
-        return jnp.stack(outs, axis=1)
+        with self._mesh_ctx():
+            logits, cache = self._prefill(self.params, batch)
+            cache = self._pad_cache(cache, s)
+            outs = []
+            key = key if key is not None else jax.random.PRNGKey(0)
+            tok = self._select(logits, key)
+            for i in range(num_tokens):
+                outs.append(tok)
+                pos = jnp.full((b,), s + i, jnp.int32)
+                logits, cache = self._decode(self.params, tok[:, None], pos,
+                                             cache)
+                key, sub = jax.random.split(key)
+                tok = self._select(logits, sub)
+            return jnp.stack(outs, axis=1)
 
     def _select(self, logits: jax.Array, key) -> jax.Array:
         if self.scfg.temperature <= 0:
@@ -194,3 +279,71 @@ class ServingEngine:
         return jax.random.categorical(
             key, logits.astype(jnp.float32) / self.scfg.temperature,
             axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------- batched request front end
+
+    def submit(self, tokens: jax.Array, num_tokens: int = 16) -> int:
+        """Queue one single-prompt generation request; returns a request id.
+
+        ``tokens`` is a 1-D int32 prompt.  Requests accumulate until
+        :meth:`drain` serves them in padding-bucket micro-batches; latency
+        is measured from this call to completion of the micro-batch that
+        served the request.
+        """
+        if getattr(tokens, "ndim", None) != 1:
+            raise ValueError("submit takes one prompt [S], got shape "
+                             f"{tuple(getattr(tokens, 'shape', ()))}")
+        if tokens.shape[0] + num_tokens > self.scfg.max_len:
+            raise ValueError(f"prompt {tokens.shape[0]} + {num_tokens} "
+                             f"tokens exceeds max_len={self.scfg.max_len}")
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append((rid, tokens, num_tokens,
+                              time.perf_counter()))
+        return rid
+
+    def drain(self) -> Dict[int, jax.Array]:
+        """Serve every pending request; returns {request_id: tokens [n_i]}.
+
+        Pending requests group by prompt length (one prefill shape per
+        group — positions stay exact with no prompt padding), then split
+        into chunks of at most ``max(buckets)``; each chunk stacks on the
+        batch axis and zero-pads up to the smallest bucket that fits, so
+        the jitted prefill/decode compile once per (prompt-len, bucket)
+        rather than once per request count — the padded rows ride the
+        kernel grid's M dimension.  The chunk decodes jointly for the
+        chunk-max token budget (continuous batched greedy decode; requests
+        with smaller budgets finish early and their rows ride along as
+        padding) and each request keeps its first ``num_tokens``.
+        """
+        buckets = self.scfg.buckets
+        cap = buckets[-1]
+        results: Dict[int, jax.Array] = {}
+        by_len: Dict[int, List] = collections.defaultdict(list)
+        for req in self._pending:
+            by_len[int(req[1].shape[0])].append(req)
+        self._pending = []
+        for plen in sorted(by_len):
+            queue = by_len[plen]
+            while queue:
+                chunk, queue = queue[:cap], queue[cap:]
+                b = len(chunk)
+                bucket = next(bk for bk in buckets if bk >= b)
+                toks = jnp.stack([t for _, t, _, _ in chunk])
+                if bucket > b:
+                    toks = jnp.pad(toks, ((0, bucket - b), (0, 0)))
+                budget = max(n for _, _, n, _ in chunk)
+                out = jax.block_until_ready(
+                    self.generate({"tokens": toks}, budget))
+                done = time.perf_counter()
+                for i, (rid, _, n, t0) in enumerate(chunk):
+                    results[rid] = out[i, :n]
+                    self._log_request(
+                        id=rid,
+                        latency_ms=(done - t0) * 1e3,
+                        bucket=bucket,
+                        batch_fill=b / bucket,
+                        prompt_len=plen,
+                        decode_tokens=budget,
+                    )
+        return results

@@ -1,0 +1,58 @@
+"""Shared batched-request front-end plumbing for the serving engines.
+
+``CNNServingEngine`` (images) and ``ServingEngine`` (LM prompts) expose the
+same ``submit()``/``drain()``/``latency_stats()`` surface; what differs is
+the payload and how a micro-batch executes.  This mixin owns the parts that
+must never diverge between them: bucket validation, request-id/pending
+bookkeeping, the sliding per-request log, and the latency summary.  Each
+engine keeps its own ``submit``/``drain`` (shape checks and micro-batch
+execution are engine-specific) and records served requests through
+:meth:`_log_request`.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Deque, Dict, List, Sequence, Tuple
+
+
+def validate_buckets(buckets: Sequence[int]) -> None:
+    """Padding buckets must be positive and ascending (drain pads a chunk
+    up to the smallest bucket that fits, so order is load-bearing)."""
+    if tuple(buckets) != tuple(sorted(buckets)) or \
+            not all(b > 0 for b in buckets):
+        raise ValueError(f"buckets must be positive ascending, "
+                         f"got {tuple(buckets)}")
+
+
+class RequestFrontEnd:
+    """Mixin: request bookkeeping + latency accounting for submit/drain."""
+
+    _next_id: int
+    _pending: List[Tuple]
+    _request_log: Deque[Dict[str, Any]]
+
+    def _init_front_end(self, stats_window: int) -> None:
+        self._next_id = 0
+        self._pending = []
+        self._request_log = collections.deque(maxlen=stats_window)
+
+    def _log_request(self, **entry: Any) -> None:
+        self._request_log.append(entry)
+
+    def latency_stats(self) -> Dict[str, float]:
+        """Per-request latency distribution over the last ``stats_window``
+        drained requests (a sliding window, bounded by construction)."""
+        import numpy as np
+
+        lat = np.array([r["latency_ms"] for r in self._request_log])
+        if lat.size == 0:
+            return {"requests": 0}
+        fill = np.array([r["batch_fill"] for r in self._request_log])
+        return {
+            "requests": int(lat.size),
+            "mean_ms": float(lat.mean()),
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p95_ms": float(np.percentile(lat, 95)),
+            "max_ms": float(lat.max()),
+            "mean_batch_fill": float(fill.mean()),
+        }

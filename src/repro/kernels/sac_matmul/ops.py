@@ -14,15 +14,21 @@ through VMEM one [bm, bk] slab per M-step.  No host-side slab loop, no
 remainder-shape retraces, no concatenate — a VGG-16-sized patch matrix costs
 one launch whose peak VMEM footprint is still a single block.
 
-``sac_matmul_pallas_sharded``: the multi-device form (docs/DESIGN.md §5) —
-the same kernel launched under ``jax.shard_map`` over a mesh axis, one
-launch per device, each device walking *its own shard's* compacted work
-list (a :class:`~repro.core.schedule.ShardedKneadedWeight`).  Activations
+``sac_matmul_pallas_sharded``: the multi-device form (docs/DESIGN.md §5,
+§8) — the same kernel launched under ``jax.shard_map`` over a mesh axis,
+one launch per device, each device walking *its own shard's* compacted work
+list (a :class:`~repro.core.schedule.ShardedKneadedWeight`, or a per-layer
+scan slice of a stacked LM
+:class:`~repro.core.schedule.ShardedStackedKneadedWeight`).  Activations
 are replicated, outputs concatenate along N with no collective in the
 matmul itself; per-device executed MXU passes equal that shard's occupancy
-nonzeros.  Both ``sac_conv2d`` and the FC dispatch accept sharded weights
-with a ``mesh``; ``mesh=None`` runs the shards serially on one device —
-the oracle the multi-device parity tests compare against.
+nonzeros.  The GEMV decode fast path survives sharding: ``_pad_activations``
+shrinks the M block *before* the shard_map, so a batch-1 LM decode step
+runs a single 8-row M-step per device rather than a 97%-padding streamed
+slab.  ``sac_conv2d``, the FC dispatch, and ``core.sac.sac_matmul`` (the
+LM projection entry) all accept sharded weights with a ``mesh``;
+``mesh=None`` runs the shards serially on one device — the oracle the
+multi-device parity tests compare against.
 """
 from __future__ import annotations
 

@@ -6,7 +6,10 @@ requested precision, and serves a batch of synthetic prompts — the
 end-to-end demonstration of the paper's technique as a serving feature.
 ``--impl pallas`` serves through the fully-kneaded bit-plane path (the SAC
 kernel's decode-GEMV fast path, docs/DESIGN.md §7); the default "quant"
-keeps the integer-matmul form selected by ``--quant``.
+keeps the integer-matmul form selected by ``--quant``.  ``--shards N``
+partitions every kneaded projection's compacted schedule over an N-device
+"model" mesh (docs/DESIGN.md §8; on CPU force devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* launch).
 """
 from __future__ import annotations
 
@@ -25,6 +28,9 @@ def main():
     ap.add_argument("--knead-min-dim", type=int, default=128,
                     help="skip kneading projections smaller than this "
                          "(lower it for smoke-size archs)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard kneaded schedules over this many 'model'-"
+                         "mesh devices (requires --impl pallas)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
@@ -58,15 +64,17 @@ def main():
     eng = ServingEngine(cfg, params, ServingConfig(
         max_len=args.prompt_len + args.tokens + 8,
         quant_bits=args.quant, temperature=args.temperature,
-        impl=args.impl, knead_min_dim=args.knead_min_dim))
+        impl=args.impl, knead_min_dim=args.knead_min_dim,
+        shards=args.shards))
     if args.impl in ("int", "planes", "pallas"):
         precision = f"kneaded int{args.quant or 8}"   # engine default: 8
     elif args.impl == "float":
         precision = "bf16"
     else:
         precision = f"int{args.quant}" if args.quant else "bf16"
+    shard_note = f", {args.shards}-way model mesh" if args.shards > 1 else ""
     print(f"serving params: {serving_bytes(eng.params)/1e6:.2f} MB "
-          f"(impl={args.impl}, {precision})")
+          f"(impl={args.impl}, {precision}{shard_note})")
 
     key = jax.random.PRNGKey(7)
     prompts = jax.random.randint(

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kneading import KneadedWeight
+from repro.core.kneading import KneadedWeight, ShardedKneadedWeight
 from repro.core.quantization import QuantizedTensor
 
 # ---------------------------------------------------------------------------
@@ -55,9 +55,12 @@ def matmul_any(x: jax.Array, w, compute_dtype=jnp.bfloat16,
     scale applied once in the epilogue (never dequantize weights up front in
     a separate HBM-visible buffer).  ``impl`` selects the SAC execution path
     for KneadedWeight leaves ("float"/"int"/"planes"/"pallas"); float leaves
-    ignore it.
+    ignore it.  N-sharded kneaded leaves (per-layer scan slices of a
+    ``ShardedStackedKneadedWeight``, or plain ``ShardedKneadedWeight``)
+    dispatch through the sharded Pallas entry under the serving mesh
+    (docs/DESIGN.md §8).
     """
-    if isinstance(w, KneadedWeight):
+    if isinstance(w, (KneadedWeight, ShardedKneadedWeight)):
         from repro.core.sac import sac_matmul
         return sac_matmul(x, w, impl=impl).astype(compute_dtype)
     if isinstance(w, QuantizedTensor):

@@ -83,7 +83,19 @@ def ssd_step(
     log_a: jax.Array,   # [B, H]
     h: jax.Array,       # [B, H, p, n]
 ) -> Tuple[jax.Array, jax.Array]:
-    """Single decode step of the same recurrence."""
+    """Single decode step of the same recurrence.
+
+    The head axis is per-layer (`nh = d_inner // ssm_head_dim` for Mamba2,
+    `num_heads` for mLSTM) and the cache must carry exactly that extent —
+    a cache whose head axis was padded or built against a different head
+    count silently broadcasts into garbage, so mismatches fail loudly here
+    (the zamba2 hybrid-decode regression: an engine-side pad once stretched
+    the state's head axis to the prompt length).
+    """
+    if h.shape[1] != u.shape[1]:
+        raise ValueError(
+            f"ssd_step state heads {h.shape[1]} != input heads {u.shape[1]}"
+            " — the decode cache does not match this layer's head count")
     a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
     h_new = h * a + jnp.einsum("bhp,bhn->bhpn", u.astype(jnp.float32),
                                b.astype(jnp.float32))

@@ -19,13 +19,46 @@ per-arch special cases.  Stacked-layer leading dims (scan) are never sharded.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+import contextlib
+import threading
+from typing import Any, Optional, Tuple
 
 import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any
+
+# ------------------------------------------------- kneaded serving mesh context
+#
+# The LM serving stack dispatches sharded kneaded matmuls from deep inside
+# the model's layer scans (models/blocks.py -> layers.matmul_any ->
+# core.sac.sac_matmul), where no mesh argument can be threaded without
+# touching every block signature.  The engine installs the mesh here around
+# its (jitted) calls — read at TRACE time by the sharded dispatch, exactly
+# like runtime.pspec's logical-axis rules.  No mesh installed means the
+# serial single-device shard walk (the parity oracle).
+
+_serving = threading.local()
+
+
+def current_serving_mesh() -> Tuple[Optional[Mesh], str]:
+    """(mesh, axis) the sharded kneaded dispatch should launch under;
+    (None, axis) = execute shards serially on the local device."""
+    return (getattr(_serving, "mesh", None),
+            getattr(_serving, "axis", "model"))
+
+
+@contextlib.contextmanager
+def serving_mesh(mesh: Optional[Mesh], axis: str = "model"):
+    """Install the mesh sharded KneadedWeight matmuls shard_map over."""
+    prev = (getattr(_serving, "mesh", None),
+            getattr(_serving, "axis", "model"))
+    _serving.mesh, _serving.axis = mesh, axis
+    try:
+        yield
+    finally:
+        _serving.mesh, _serving.axis = prev
 
 # parameter name -> (spec for trailing dims), matched on the *last* path key
 # or a distinctive substring of the joined path.  fsdp == ("pod","data")∩mesh.
@@ -182,18 +215,24 @@ def tree_param_specs(params_shape: PyTree, mesh: Mesh,
     planes/signs and schedule arrays are one indivisible kernel program —
     the projection-name rules above would otherwise try to TP-shard the
     uint32 plane words, splitting a work list from the tiles it indexes),
-    and a :class:`~repro.core.schedule.ShardedKneadedWeight` keeps its
-    leading shard axis on "model" (the placement
-    :func:`kneaded_param_specs` defines).
+    a :class:`~repro.core.schedule.ShardedKneadedWeight` keeps its leading
+    shard axis on "model", and a stacked
+    :class:`~repro.core.schedule.ShardedStackedKneadedWeight` keeps its
+    shard axis (axis 1, behind the scan-layer axis) on "model" (the
+    placement :func:`kneaded_param_specs` defines).
     """
     from repro.core.kneading import KneadedWeight
-    from repro.core.schedule import ShardedKneadedWeight
+    from repro.core.schedule import (ShardedKneadedWeight,
+                                     ShardedStackedKneadedWeight)
 
     kinds = (KneadedWeight, ShardedKneadedWeight)
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         params_shape, is_leaf=lambda x: isinstance(x, kinds))
     specs = []
     for path, leaf in flat:
+        if isinstance(leaf, ShardedStackedKneadedWeight):
+            specs.append(jax.tree.map(lambda _: P(None, "model"), leaf))
+            continue
         if isinstance(leaf, ShardedKneadedWeight):
             specs.append(jax.tree.map(lambda _: P("model"), leaf))
             continue
@@ -215,19 +254,26 @@ def tree_shardings(params_shape: PyTree, mesh: Mesh,
 # ------------------------------------------------------- kneaded CNN serving
 
 def kneaded_param_specs(tree: PyTree, axis: str = "model") -> PyTree:
-    """PartitionSpecs for a kneaded-CNN param tree (docs/DESIGN.md §5).
+    """PartitionSpecs for a kneaded param tree (docs/DESIGN.md §5, §8).
 
     :class:`~repro.core.schedule.ShardedKneadedWeight` leaves stack one
     weight/schedule slab per device on their leading shard axis — every
     array field gets ``P(axis)`` so device *i* holds shard *i*'s planes,
     signs, scales, AND compacted work lists (the schedule shards with the
-    weight; there is no replicated metadata to walk).  Unsharded leaves
-    (biases, float weights, unsharded ``KneadedWeight``) replicate: they are
-    tiny or consumed by every device's epilogue.
+    weight; there is no replicated metadata to walk).  Stacked
+    :class:`~repro.core.schedule.ShardedStackedKneadedWeight` leaves carry
+    the scan-layer axis in front (``[L, S, ...]``) and get
+    ``P(None, axis)`` — the layer axis is never sharded (it is the
+    ``lax.scan`` slice axis), the shard axis maps one slab per device.
+    Unsharded leaves (biases, float weights, unsharded ``KneadedWeight``)
+    replicate: they are tiny or consumed by every device's epilogue.
     """
-    from repro.core.schedule import ShardedKneadedWeight
+    from repro.core.schedule import (ShardedKneadedWeight,
+                                     ShardedStackedKneadedWeight)
 
     def spec(leaf):
+        if isinstance(leaf, ShardedStackedKneadedWeight):
+            return jax.tree.map(lambda _: P(None, axis), leaf)
         if isinstance(leaf, ShardedKneadedWeight):
             return jax.tree.map(lambda _: P(axis), leaf)
         return jax.tree.map(lambda _: P(), leaf)
