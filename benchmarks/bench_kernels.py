@@ -23,7 +23,10 @@ batch 1/8 x shards 1/2/4 on a two-layer column-sparse projection bank,
 per-shard work + imbalance reported, tile-dots/critical-path-load/max-err
 gated.  ``serving`` runs the batched submit()/drain() front end on an
 AlexNet-16 engine and reports per-request latency (wall clock: reported,
-not gated).
+not gated).  ``serving_load_sweep`` replays a fixed Poisson request trace
+against the LM engine's batch vs continuous schedulers (docs/DESIGN.md §9)
+in deterministic tick space — latency-in-ticks p50/p95 and total ticks are
+gated, wall tokens/s reported.
 
 ``--quick`` shrinks the raw-kernel shapes/bit sweeps to CI-smoke size (the
 AlexNet sweep is metadata-only and always runs); ``--json PATH`` writes the
@@ -34,6 +37,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -353,10 +357,103 @@ def serving_rows(quick: bool) -> List[BenchRow]:
          "mean_batch_fill": stats["mean_batch_fill"]})]
 
 
+def serving_load_sweep(quick: bool) -> List[BenchRow]:
+    """Latency under load: batch-synchronous drain() vs the continuous
+    scheduler on an identical Poisson request trace.
+
+    Arrivals are generated in **tick space** — the engines' virtual-launch
+    clock (+1 per jitted prefill/decode) — with a fixed seed, so the whole
+    sweep is deterministic: per-request ``latency_ticks`` p50/p95 and the
+    trace's ``total_ticks`` join the CI regression gate, while wall-clock
+    tokens/s is reported only.  Each rate drives both engines through the
+    same (arrival tick, prompt len, budget) trace: the batch server drains
+    a wave whenever requests are waiting (new arrivals during a wave queue
+    for the next one — the wave barrier this sweep exists to price), the
+    continuous server admits at step granularity.  The bench self-checks
+    the ISSUE acceptance bar: at the highest arrival rate, continuous p95
+    must not exceed batch p95.
+    """
+    from repro.configs.registry import get_config
+    from repro.inference.engine import ServingConfig, ServingEngine
+    from repro.models.lm import LanguageModel
+
+    cfg = get_config("smollm-360m", smoke=True)
+    params = LanguageModel(cfg).init(jax.random.PRNGKey(0))
+    n_req = 8 if quick else 16
+    plens = [6, 10, 4, 6]
+    budgets = [4, 8, 2, 6]
+    prompts = [jax.random.randint(jax.random.PRNGKey(100 + i),
+                                  (plens[i % 4],), 0, cfg.vocab_size)
+               for i in range(n_req)]
+
+    def make_engine(scheduler):
+        return ServingEngine(cfg, params, ServingConfig(
+            max_len=32, impl="int", knead_min_dim=8, buckets=(1, 2, 4),
+            scheduler=scheduler, max_inflight=4, kv_block=16))
+
+    def trace_for(lam):
+        rng = np.random.default_rng(1234 + lam)
+        gaps = rng.poisson(lam, size=n_req)
+        return np.cumsum(gaps).tolist()
+
+    def drive_batch(eng, arrivals):
+        i = 0
+        while i < n_req:
+            eng.ticks = max(eng.ticks, arrivals[i])
+            while i < n_req and arrivals[i] <= eng.ticks:
+                h = eng.submit(prompts[i], budgets[i % 4])
+                h._req.submit_tick = arrivals[i]   # true arrival, not drain
+                i += 1
+            eng.drain()
+        eng.drain()
+
+    def drive_continuous(eng, arrivals):
+        i = 0
+        busy = False
+        while i < n_req or busy:
+            while i < n_req and arrivals[i] <= eng.ticks:
+                h = eng.submit(prompts[i], budgets[i % 4])
+                h._req.submit_tick = arrivals[i]
+                i += 1
+            if not busy and i < n_req and not eng._pending:
+                eng.ticks = arrivals[i]            # idle: jump to arrival
+                continue
+            busy = eng.scheduler_step()
+
+    rows: List[BenchRow] = []
+    p95_by = {}
+    for lam in (12, 6, 2):                         # mean interarrival ticks
+        arrivals = trace_for(lam)
+        for sched, drive in (("batch", drive_batch),
+                             ("continuous", drive_continuous)):
+            eng = make_engine(sched)
+            t0 = time.perf_counter()     # stateful drive: no warmup call
+            drive(eng, arrivals)
+            us = (time.perf_counter() - t0) * 1e6
+            lat = np.array([r["latency_ticks"] for r in eng._request_log])
+            assert lat.size == n_req, (sched, lam, lat.size)
+            toks = sum(budgets[i % 4] for i in range(n_req))
+            met = {
+                "p50_latency_ticks": float(np.percentile(lat, 50)),
+                "p95_latency_ticks": float(np.percentile(lat, 95)),
+                "total_ticks": float(eng.ticks),
+                "tokens_per_s": toks / (us * 1e-6),   # wall: not gated
+            }
+            p95_by[(sched, lam)] = met["p95_latency_ticks"]
+            rows.append((
+                f"serving_load_sweep/{sched}@lam{lam}", us,
+                f"p50={met['p50_latency_ticks']:.0f} "
+                f"p95={met['p95_latency_ticks']:.0f}t "
+                f"total={eng.ticks}t tok_s={met['tokens_per_s']:.1f}", met))
+    # the acceptance bar: continuous beats the wave barrier at peak load
+    assert p95_by[("continuous", 2)] <= p95_by[("batch", 2)], p95_by
+    return rows
+
+
 def run(quick: bool = False) -> List[BenchRow]:
     return (sac_rows(quick) + alexnet_sweep() + sharded_sweep()
             + decode_sweep(quick) + sharded_decode_sweep(quick)
-            + serving_rows(quick))
+            + serving_rows(quick) + serving_load_sweep(quick))
 
 
 def main(argv: Optional[List[str]] = None) -> None:

@@ -31,9 +31,13 @@ BASELINE = pathlib.Path(__file__).resolve().parent / "artifacts" / \
 # is the sharded sweep's critical-path load: the MXU passes the most-loaded
 # device of the 4-shard partition executes — a PR that skews the N-shard
 # balance (or inflates any shard's work list) by >tolerance fails even if
-# the total stays flat.
+# the total stays flat.  The latency-tick metrics come from the
+# serving_load_sweep's fixed Poisson trace on the virtual-launch clock:
+# a scheduler change that makes requests wait more launches, or spends
+# more launches on the same trace, fails the build.
 GATED = ("executed_tile_dots", "cycle_ratio", "max_err",
-         "shard_executed_max")
+         "shard_executed_max", "p50_latency_ticks", "p95_latency_ticks",
+         "total_ticks")
 # max_err floor: don't flag 1e-6-scale float noise as a "regression"
 ABS_FLOOR = {"max_err": 1e-4}
 

@@ -7,7 +7,8 @@ config runnable on one CPU).  ``repro.configs.registry`` maps ids to both.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import warnings
+from typing import Optional, Tuple
 
 __all__ = ["ModelConfig", "InputShape", "LM_SHAPES", "shape_by_name"]
 
@@ -78,10 +79,25 @@ class ModelConfig:
     # LM serving form, docs/DESIGN.md §7): "float" | "int" | "planes" |
     # "pallas".  Float-weight leaves ignore it, so training configs can
     # leave the default; ServingEngine overrides it to match its impl.
-    sac_impl: str = "int"
+    # (Canonical name ``impl`` — the same switch the serving configs use;
+    # ``sac_impl=`` is accepted as a deprecated constructor/replace alias,
+    # consumed by __post_init__ and normalized back to None so a later
+    # ``dataclasses.replace(cfg, impl=...)`` can never be overridden by a
+    # stale copied alias.  Read sites must use ``cfg.impl``.)
+    impl: str = "int"
+    sac_impl: Optional[str] = dataclasses.field(default=None, repr=False,
+                                                compare=False)
     window: int = 0                   # >0: sliding-window attention (long ctx)
     # training
     microbatch: int = 0               # 0 -> no gradient accumulation
+
+    def __post_init__(self) -> None:
+        if self.sac_impl is not None:
+            warnings.warn(
+                "ModelConfig.sac_impl is deprecated; use impl=",
+                DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "impl", self.sac_impl)
+            object.__setattr__(self, "sac_impl", None)
 
     @property
     def hd(self) -> int:

@@ -45,7 +45,8 @@ from repro.core.kneading import (KneadedWeight, ShardedKneadedWeight,
                                  kneaded_codes, kneading_ratio)
 from repro.core.quantization import quantize
 from repro.core.sac import SAC_IMPLS
-from repro.inference.frontend import RequestFrontEnd, validate_buckets
+from repro.inference.frontend import (RequestFrontEnd, RequestHandle,
+                                      validate_buckets)
 from repro.models import cnn
 
 PyTree = Any
@@ -127,20 +128,29 @@ class CNNServingEngine(RequestFrontEnd):
 
     # ------------------------------------------------- batched request front end
 
-    def submit(self, x: jax.Array) -> int:
-        """Queue one single-image request [H, W, C]; returns a request id.
+    def submit(self, x: jax.Array) -> "RequestHandle":
+        """Queue one single-image request [H, W, C].
 
-        Requests accumulate until :meth:`drain` runs them in padding-bucket
-        micro-batches; per-request latency is measured from this call to the
-        completion of the micro-batch that served it.
+        Returns a :class:`~repro.inference.frontend.RequestHandle` (an
+        int-compatible request id with ``result()``/``stream()``/
+        ``cancel()``).  Requests accumulate until :meth:`drain` runs them
+        in padding-bucket micro-batches; per-request latency is measured
+        from this call to the completion of the micro-batch that served
+        it.  The image shape is validated here, against the model config,
+        so a bad request fails at submit with a clear error rather than
+        as a shape mismatch deep inside the jitted forward.
         """
         if x.ndim != 3:
             raise ValueError(f"submit takes one image [H, W, C], "
                              f"got shape {tuple(x.shape)}")
-        rid = self._next_id
-        self._next_id += 1
-        self._pending.append((rid, x, time.perf_counter()))
-        return rid
+        want = (self.cfg.image_size, self.cfg.image_size,
+                self.cfg.in_channels)
+        if tuple(x.shape) != want:
+            raise ValueError(f"image shape {tuple(x.shape)} does not match "
+                             f"the model's input {want} "
+                             f"(image_size={self.cfg.image_size}, "
+                             f"in_channels={self.cfg.in_channels})")
+        return self._new_request(x)
 
     def drain(self) -> Dict[int, jax.Array]:
         """Serve every pending request; returns {request_id: logits}.
@@ -151,6 +161,7 @@ class CNNServingEngine(RequestFrontEnd):
         dimension and are sliced off), so the jitted forward sees one shape
         per bucket — no per-request-count retraces.
         """
+        from repro.inference import frontend as fe
         buckets = self.scfg.buckets
         cap = buckets[-1]
         results: Dict[int, jax.Array] = {}
@@ -158,16 +169,26 @@ class CNNServingEngine(RequestFrontEnd):
             chunk, self._pending = self._pending[:cap], self._pending[cap:]
             b = len(chunk)
             bucket = next(bk for bk in buckets if bk >= b)
-            xb = jnp.stack([x for _, x, _ in chunk])
+            start = time.perf_counter()
+            start_tick = self.ticks
+            xb = jnp.stack([r.payload for r in chunk])
             if bucket > b:
                 xb = jnp.pad(xb, ((0, bucket - b),) + ((0, 0),) * 3)
+            self.ticks += 1                     # one jitted forward launch
             out = jax.block_until_ready(self.logits(xb))[:b]
             done = time.perf_counter()
-            for i, (rid, _, t0) in enumerate(chunk):
-                results[rid] = out[i]
+            for i, req in enumerate(chunk):
+                req.state = fe.DONE
+                req.result = out[i]
+                req.admit_t, req.finish_t = start, done
+                req.admit_tick, req.finish_tick = start_tick, self.ticks
+                results[req.id] = req.result
                 self._log_request(
-                    id=rid,
-                    latency_ms=(done - t0) * 1e3,
+                    id=req.id,
+                    latency_ms=(done - req.submit_t) * 1e3,
+                    queue_wait_ms=(start - req.submit_t) * 1e3,
+                    decode_ms=(done - start) * 1e3,
+                    latency_ticks=self.ticks - req.submit_tick,
                     bucket=bucket,
                     batch_fill=b / bucket,
                 )

@@ -34,7 +34,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.inference.frontend import RequestFrontEnd, validate_buckets
+from repro.inference.frontend import (RequestFrontEnd, RequestHandle,
+                                      validate_buckets)
+from repro.inference.scheduler import ContinuousScheduler
 from repro.core.kneading import (KneadedWeight, ShardedKneadedWeight,
                                  knead_padded, knead_stacked,
                                  shard_schedule, shard_stacked_schedule)
@@ -164,6 +166,22 @@ class ServingConfig:
     # and the sliding per-request latency log window.
     buckets: Tuple[int, ...] = (1, 2, 4, 8)
     stats_window: int = 4096
+    # Request scheduler (docs/DESIGN.md §9):
+    #   "batch"      — submit() queues, drain() serves padding-bucket
+    #                  micro-batches to completion (wave-synchronous).
+    #   "continuous" — step-level slot scheduler: prompts admit into free
+    #                  slots each step, finished requests retire (and free
+    #                  their KV blocks) immediately; handles stream tokens
+    #                  as they decode.  drain() remains a thin wrapper.
+    scheduler: str = "batch"
+    max_inflight: int = 8         # continuous: in-flight slot capacity
+    # continuous KV pool: block granularity in tokens (0 = dense rows at
+    # max_len) and total pool budget in tokens (0 = slots * max_len)
+    kv_block: int = 32
+    kv_pool_tokens: int = 0
+    # continuous: cap on admitted prompt tokens per scheduler step (0 =
+    # uncapped) — bounds how much prefill work interleaves one decode step
+    prefill_chunk: int = 0
 
 
 class ServingEngine(RequestFrontEnd):
@@ -175,6 +193,17 @@ class ServingEngine(RequestFrontEnd):
         if scfg.shards > 1 and scfg.impl != "pallas":
             raise ValueError("sharded serving runs the Pallas kernel; "
                              f"impl={scfg.impl!r} is single-device only")
+        if scfg.scheduler not in ("batch", "continuous"):
+            raise ValueError(f"scheduler must be 'batch' or 'continuous', "
+                             f"got {scfg.scheduler!r}")
+        if scfg.scheduler == "continuous":
+            if cfg.family in ("vlm", "encdec"):
+                raise ValueError(
+                    f"continuous scheduler serves token-prompt families "
+                    f"only; {cfg.family!r} prefill needs side inputs "
+                    f"(frames/image embeddings) — use scheduler='batch'")
+            if scfg.max_inflight < 1:
+                raise ValueError("max_inflight must be >= 1")
         validate_buckets(scfg.buckets)
         self.scfg = scfg
         self.mesh = None
@@ -187,7 +216,7 @@ class ServingEngine(RequestFrontEnd):
         else:
             # kneaded serving: the model dispatches every KneadedWeight
             # matmul through the configured SAC path
-            self.cfg = dataclasses.replace(cfg, sac_impl=scfg.impl)
+            self.cfg = dataclasses.replace(cfg, impl=scfg.impl)
             self.params = knead_params(
                 params, bits=scfg.quant_bits or 8,
                 min_dim=scfg.knead_min_dim, kneaded=True,
@@ -205,6 +234,8 @@ class ServingEngine(RequestFrontEnd):
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(3,))
         self._init_front_end(scfg.stats_window)
+        self._scheduler = (ContinuousScheduler(self)
+                           if scfg.scheduler == "continuous" else None)
 
     def _mesh_ctx(self):
         """Serving-mesh context the sharded kneaded matmuls dispatch under
@@ -258,6 +289,8 @@ class ServingEngine(RequestFrontEnd):
         tokens = batch["tokens"]
         b, s = tokens.shape
         assert s + num_tokens <= self.scfg.max_len
+        # virtual-launch clock: one prefill + num_tokens decode launches
+        self.ticks += 1 + num_tokens
         with self._mesh_ctx():
             logits, cache = self._prefill(self.params, batch)
             cache = self._pad_cache(cache, s)
@@ -282,46 +315,70 @@ class ServingEngine(RequestFrontEnd):
 
     # ------------------------------------------- batched request front end
 
-    def submit(self, tokens: jax.Array, num_tokens: int = 16) -> int:
-        """Queue one single-prompt generation request; returns a request id.
+    def submit(self, tokens: jax.Array, num_tokens: int = 16, *,
+               priority: int = 0,
+               deadline: Optional[float] = None) -> RequestHandle:
+        """Queue one single-prompt generation request.
 
-        ``tokens`` is a 1-D int32 prompt.  Requests accumulate until
-        :meth:`drain` serves them in padding-bucket micro-batches; latency
-        is measured from this call to completion of the micro-batch that
-        served the request.
+        ``tokens`` is a 1-D int32 prompt.  Returns a
+        :class:`~repro.inference.frontend.RequestHandle` — it compares/
+        hashes as the integer request id (so the classic
+        ``results = drain(); results[rid]`` flow is unchanged) and adds
+        ``result()`` (block for this request), ``stream()`` (per-token
+        iterator), and ``cancel()``.  ``priority`` orders admission under
+        the continuous scheduler (higher first; FIFO within a priority);
+        ``deadline`` (seconds from now) expires the request if it is
+        still queued when the scheduler next looks at it.
         """
         if getattr(tokens, "ndim", None) != 1:
             raise ValueError("submit takes one prompt [S], got shape "
                              f"{tuple(getattr(tokens, 'shape', ()))}")
-        if tokens.shape[0] + num_tokens > self.scfg.max_len:
+        if tokens.shape[0] < 1:
+            raise ValueError("prompt must contain at least one token")
+        if num_tokens < 1:
+            raise ValueError(f"num_tokens must be >= 1, got {num_tokens}")
+        total = int(tokens.shape[0]) + num_tokens
+        if total > self.scfg.max_len:
             raise ValueError(f"prompt {tokens.shape[0]} + {num_tokens} "
                              f"tokens exceeds max_len={self.scfg.max_len}")
-        rid = self._next_id
-        self._next_id += 1
-        self._pending.append((rid, tokens, num_tokens,
-                              time.perf_counter()))
-        return rid
+        if self._scheduler is not None and not self._scheduler.pool.fits(
+                total):
+            raise ValueError(
+                f"request needs {total} KV tokens "
+                f"({self._scheduler.pool.blocks_needed(total)} blocks) but "
+                f"the pool holds {self._scheduler.pool.total_blocks} blocks "
+                f"of {self._scheduler.pool.block} "
+                f"(kv_pool_tokens={self.scfg.kv_pool_tokens})")
+        return self._new_request(tokens, num_tokens, priority=priority,
+                                 deadline=deadline)
 
     def drain(self) -> Dict[int, jax.Array]:
         """Serve every pending request; returns {request_id: tokens [n_i]}.
 
-        Pending requests group by prompt length (one prefill shape per
-        group — positions stay exact with no prompt padding), then split
-        into chunks of at most ``max(buckets)``; each chunk stacks on the
+        Under ``scheduler="continuous"`` this is a thin compatibility
+        wrapper: it runs the step loop until the wave that was pending at
+        call time retires (admission/retirement still happen per step
+        inside).  The batch-synchronous path below groups pending
+        requests by prompt length (one prefill shape per group —
+        positions stay exact with no prompt padding), then splits into
+        chunks of at most ``max(buckets)``; each chunk stacks on the
         batch axis and zero-pads up to the smallest bucket that fits, so
         the jitted prefill/decode compile once per (prompt-len, bucket)
         rather than once per request count — the padded rows ride the
         kernel grid's M dimension.  The chunk decodes jointly for the
-        chunk-max token budget (continuous batched greedy decode; requests
-        with smaller budgets finish early and their rows ride along as
-        padding) and each request keeps its first ``num_tokens``.
+        chunk-max token budget (requests with smaller budgets finish
+        early and their rows ride along as padding) and each request
+        keeps its first ``num_tokens``.
         """
+        if self._scheduler is not None:
+            return self._scheduler.drain()
+        from repro.inference import frontend as fe
         buckets = self.scfg.buckets
         cap = buckets[-1]
         results: Dict[int, jax.Array] = {}
         by_len: Dict[int, List] = collections.defaultdict(list)
         for req in self._pending:
-            by_len[int(req[1].shape[0])].append(req)
+            by_len[req.prompt_len].append(req)
         self._pending = []
         for plen in sorted(by_len):
             queue = by_len[plen]
@@ -329,21 +386,59 @@ class ServingEngine(RequestFrontEnd):
                 chunk, queue = queue[:cap], queue[cap:]
                 b = len(chunk)
                 bucket = next(bk for bk in buckets if bk >= b)
-                toks = jnp.stack([t for _, t, _, _ in chunk])
+                start = time.perf_counter()
+                start_tick = self.ticks
+                toks = jnp.stack([r.payload for r in chunk])
                 if bucket > b:
                     toks = jnp.pad(toks, ((0, bucket - b), (0, 0)))
-                budget = max(n for _, _, n, _ in chunk)
+                budget = max(r.num_tokens for r in chunk)
                 out = jax.block_until_ready(
                     self.generate({"tokens": toks}, budget))
                 done = time.perf_counter()
-                for i, (rid, _, n, t0) in enumerate(chunk):
-                    results[rid] = out[i, :n]
+                for i, req in enumerate(chunk):
+                    req.state = fe.DONE
+                    req.result = out[i, :req.num_tokens]
+                    req.admit_t, req.finish_t = start, done
+                    req.admit_tick = start_tick
+                    req.finish_tick = self.ticks
+                    results[req.id] = req.result
                     self._log_request(
-                        id=rid,
-                        latency_ms=(done - t0) * 1e3,
+                        id=req.id,
+                        latency_ms=(done - req.submit_t) * 1e3,
+                        queue_wait_ms=(start - req.submit_t) * 1e3,
+                        decode_ms=(done - start) * 1e3,
+                        latency_ticks=self.ticks - req.submit_tick,
+                        queue_wait_ticks=start_tick - req.submit_tick,
                         bucket=bucket,
                         batch_fill=b / bucket,
                         prompt_len=plen,
                         decode_tokens=budget,
                     )
         return results
+
+    # ---- RequestHandle backends (continuous mode steps the scheduler
+    # just far enough; batch mode falls back to the mixin's drain-all)
+
+    def _result(self, req):
+        if self._scheduler is not None:
+            self._scheduler.run_until(req)
+            return self._finished_result(req)
+        return super()._result(req)
+
+    def _stream(self, req):
+        if self._scheduler is not None:
+            return self._scheduler.stream(req)
+        return super()._stream(req)
+
+    def _cancel(self, req) -> bool:
+        if self._scheduler is not None:
+            return self._scheduler.cancel(req)
+        return super()._cancel(req)
+
+    def scheduler_step(self) -> bool:
+        """Advance the continuous scheduler by one step (admit -> decode
+        -> retire).  Returns True while work remains.  Batch mode: error."""
+        if self._scheduler is None:
+            raise ValueError("scheduler_step() requires "
+                             "ServingConfig(scheduler='continuous')")
+        return self._scheduler.step()

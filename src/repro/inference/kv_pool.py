@@ -1,0 +1,125 @@
+"""Block-granular KV-cache pool for the continuous-batching scheduler.
+
+The batch-synchronous ``drain()`` path pads every request's KV cache to
+``max_len`` and pays for that padding on *every* decode step: attention
+reads the full extent whether the longest in-flight request needs 16
+positions or 512.  The pool breaks that coupling (docs/DESIGN.md §9):
+
+* KV capacity is a shared budget of fixed-size **blocks** (``block``
+  tokens each).  A request is admitted only when the pool can reserve
+  ``ceil((prompt + budget) / block)`` blocks — admission control is a
+  *token* budget, not just a slot count, so many short requests can be
+  in flight where few long ones would fit.
+* Each in-flight slot owns a **block table** (the physical block ids
+  reserved for it).  On this container the tables drive accounting and
+  the per-step compute extent; on a TPU the same tables are what a paged
+  attention kernel would consume to gather non-contiguous blocks.
+* :meth:`extent` is the pool's high-water mark — the largest allocated
+  per-slot extent, in whole blocks.  The scheduler sizes its jitted
+  decode step to this extent instead of ``max_len``, so a step's
+  attention cost tracks the *longest live request* (rounded up to a
+  block) and shrinks when long requests retire.  Block-multiple extents
+  keep the jit compile cache bounded: at most ``max_len / block``
+  decode-step shapes per slot capacity.
+
+Reservation is up front (prompt + full token budget at admission), so a
+running request can never hit pool exhaustion mid-decode — there is no
+preemption/swap path to get wrong.  The cost is admitting slightly
+conservatively; the paper-faithful analogy is a Tetris schedule that
+reserves its worst-case lane depth at dispatch time.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when a reservation is attempted beyond the pool budget."""
+
+
+class KVBlockPool:
+    """Fixed budget of KV blocks shared by the scheduler's slots.
+
+    ``block`` is the allocation granularity in tokens (0 selects one
+    block spanning ``max_len`` — the degenerate "dense row" pool).
+    ``total_tokens`` caps the shared budget; 0 sizes the pool so every
+    slot can hold a full ``max_len`` request (the un-constrained
+    default — admission then limited by slots alone).
+    """
+
+    def __init__(self, num_slots: int, max_len: int, block: int = 0,
+                 total_tokens: int = 0) -> None:
+        if num_slots < 1 or max_len < 1:
+            raise ValueError(f"need num_slots/max_len >= 1, got "
+                             f"{num_slots}/{max_len}")
+        self.block = min(block, max_len) if block > 0 else max_len
+        self.max_len = max_len
+        self.blocks_per_request_max = -(-max_len // self.block)
+        budget = total_tokens or num_slots * max_len
+        self.total_blocks = max(1, -(-budget // self.block))
+        self._free: List[int] = list(range(self.total_blocks))
+        self._tables: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------ queries
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        return -(-max(1, n_tokens) // self.block)
+
+    def fits(self, n_tokens: int) -> bool:
+        """Could a request of ``n_tokens`` EVER be admitted (empty pool)?
+        Submit-time validation uses this for a clear early error."""
+        return (n_tokens <= self.max_len
+                and self.blocks_needed(n_tokens) <= self.total_blocks)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.blocks_needed(n_tokens) <= len(self._free)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.total_blocks - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_blocks / self.total_blocks
+
+    def block_table(self, slot: int) -> List[int]:
+        return list(self._tables.get(slot, ()))
+
+    def slot_extent(self, slot: int) -> int:
+        """Allocated token extent of one slot (whole blocks)."""
+        return len(self._tables.get(slot, ())) * self.block
+
+    def extent(self) -> int:
+        """High-water compute extent over live slots, in whole blocks,
+        capped at ``max_len`` (the scheduler's decode-step seq extent)."""
+        if not self._tables:
+            return 0
+        return min(self.max_len,
+                   max(len(t) for t in self._tables.values()) * self.block)
+
+    # -------------------------------------------------------- reservations
+
+    def alloc(self, slot: int, n_tokens: int) -> List[int]:
+        """Reserve blocks for ``n_tokens`` on ``slot``; returns the table."""
+        if slot in self._tables:
+            raise ValueError(f"slot {slot} already holds a reservation")
+        need = self.blocks_needed(n_tokens)
+        if need > len(self._free):
+            raise PoolExhausted(
+                f"{need} blocks needed, {len(self._free)} free "
+                f"(of {self.total_blocks})")
+        table, self._free = self._free[:need], self._free[need:]
+        self._tables[slot] = table
+        return list(table)
+
+    def free(self, slot: int) -> int:
+        """Release a slot's reservation; returns the block count freed.
+        (Free list kept sorted so reuse patterns are deterministic.)"""
+        table = self._tables.pop(slot, None)
+        if table is None:
+            return 0
+        self._free = sorted(self._free + table)
+        return len(table)

@@ -10,6 +10,13 @@ keeps the integer-matmul form selected by ``--quant``.  ``--shards N``
 partitions every kneaded projection's compacted schedule over an N-device
 "model" mesh (docs/DESIGN.md §8; on CPU force devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* launch).
+
+``--scheduler continuous`` routes the same prompts through the request
+front end's continuous-batching slot scheduler (docs/DESIGN.md §9) with
+``--max-inflight`` in-flight slots; ``--stream`` prints the first request's
+tokens as they decode.  Both schedulers print the queue-wait vs decode-time
+latency breakdown (p50/p95) from ``latency_stats()`` so they are directly
+comparable from the CLI.
 """
 from __future__ import annotations
 
@@ -37,6 +44,15 @@ def main():
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from a training checkpoint dir")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--scheduler", default="batch",
+                    choices=["batch", "continuous"],
+                    help="request scheduler: wave-synchronous padding-"
+                         "bucket drain (batch) or the step-level slot "
+                         "scheduler with a paged KV pool (continuous)")
+    ap.add_argument("--max-inflight", type=int, default=8,
+                    help="continuous scheduler: in-flight slot capacity")
+    ap.add_argument("--stream", action="store_true",
+                    help="print the first request's tokens as they decode")
     args = ap.parse_args()
 
     import jax
@@ -65,7 +81,8 @@ def main():
         max_len=args.prompt_len + args.tokens + 8,
         quant_bits=args.quant, temperature=args.temperature,
         impl=args.impl, knead_min_dim=args.knead_min_dim,
-        shards=args.shards))
+        shards=args.shards, scheduler=args.scheduler,
+        max_inflight=args.max_inflight))
     if args.impl in ("int", "planes", "pallas"):
         precision = f"kneaded int{args.quant or 8}"   # engine default: 8
     elif args.impl == "float":
@@ -88,12 +105,37 @@ def main():
             key, (args.batch, cfg.num_image_tokens, cfg.d_model))
 
     t0 = time.perf_counter()
-    out = eng.generate(batch, args.tokens)
+    if cfg.family in ("encdec", "vlm") or (args.scheduler == "batch"
+                                           and not args.stream):
+        out = eng.generate(batch, args.tokens)
+        rows = [r.tolist() for r in out[:2]]
+    else:
+        # route through the request front end so the scheduler choice
+        # (and per-request stats) actually exercises
+        handles = [eng.submit(prompts[i], args.tokens)
+                   for i in range(args.batch)]
+        if args.stream:
+            print("streaming request 0:", end=" ", flush=True)
+            for tok in handles[0].stream():
+                print(tok, end=" ", flush=True)
+            print()
+        eng.drain()
+        rows = [h.result().tolist() for h in handles[:2]]
     dt = time.perf_counter() - t0
     print(f"generated [{args.batch} x {args.tokens}] in {dt:.2f}s "
-          f"({args.batch*args.tokens/dt:.1f} tok/s)")
-    for row in out[:2]:
-        print("  ", row.tolist())
+          f"({args.batch*args.tokens/dt:.1f} tok/s, "
+          f"scheduler={args.scheduler})")
+    for row in rows:
+        print("  ", row)
+    stats = eng.latency_stats()
+    if stats["requests"]:
+        print(f"latency p50/p95: {stats['p50_ms']:.1f}/"
+              f"{stats['p95_ms']:.1f} ms over {stats['requests']} requests")
+        if "queue_wait_p50_ms" in stats:
+            print(f"  queue wait p50/p95: {stats['queue_wait_p50_ms']:.1f}/"
+                  f"{stats['queue_wait_p95_ms']:.1f} ms | decode p50/p95: "
+                  f"{stats['decode_p50_ms']:.1f}/"
+                  f"{stats['decode_p95_ms']:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -330,7 +330,7 @@ class LanguageModel:
         h, _, _ = self._hidden(params, batch)
         return layers.matmul_any(h, self._unembed_w(params),
                                  jnp.dtype(self.cfg.dtype),
-                                 impl=self.cfg.sac_impl)
+                                 impl=self.cfg.impl)
 
     def loss(self, params, batch, loss_chunk: int = 0) -> jax.Array:
         """Cross entropy + MoE aux.  The vocab matmul runs in bf16 with f32
@@ -376,7 +376,7 @@ class LanguageModel:
         last = h[:, -1]
         logits = layers.matmul_any(last, self._unembed_w(params),
                                    jnp.dtype(self.cfg.dtype),
-                                   impl=self.cfg.sac_impl)
+                                   impl=self.cfg.impl)
         # pad KV caches to max length happens in inference.engine; here the
         # cache covers the prefilled prefix exactly.
         return logits, cache
@@ -602,5 +602,5 @@ class LanguageModel:
         h = layers.apply_norm(params["final_norm"], h, cfg.norm)
         logits = layers.matmul_any(h[:, 0], self._unembed_w(params),
                                    jnp.dtype(cfg.dtype),
-                                   impl=cfg.sac_impl)
+                                   impl=cfg.impl)
         return logits, cache

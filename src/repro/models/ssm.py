@@ -149,7 +149,7 @@ def _mamba2_project(p, h, cfg: ModelConfig, dtype):
     di = cfg.ssm_expand * d
     n = cfg.ssm_state
     nh = di // cfg.ssm_head_dim
-    zxbcdt = matmul_any(h, p["in_proj"], dtype, impl=cfg.sac_impl)
+    zxbcdt = matmul_any(h, p["in_proj"], dtype, impl=cfg.impl)
     z, xc, b, c, dt = jnp.split(
         zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
@@ -187,7 +187,7 @@ def mamba2_apply(p, x: jax.Array, cfg: ModelConfig, *,
     y = y.reshape(bsz, -1, di)
     y = layers.apply_norm(p["out_norm"], y, "rmsnorm") * jax.nn.silu(
         z.astype(jnp.float32)).astype(y.dtype)
-    out = matmul_any(y, p["out_proj"], dtype, impl=cfg.sac_impl)
+    out = matmul_any(y, p["out_proj"], dtype, impl=cfg.impl)
     return x + out, new_cache
 
 
@@ -235,9 +235,9 @@ def mlstm_apply(p, x: jax.Array, cfg: ModelConfig, *, cache=None,
     nh = cfg.num_heads
     hd = di // nh
     h = layers.apply_norm(p["ln"], x, cfg.norm)
-    u2 = matmul_any(h, p["up"], dtype, impl=cfg.sac_impl)
+    u2 = matmul_any(h, p["up"], dtype, impl=cfg.impl)
     xm, z = jnp.split(u2, 2, axis=-1)
-    impl = cfg.sac_impl
+    impl = cfg.impl
     q = matmul_any(xm, p["wq"], dtype, impl=impl).reshape(bsz, l, nh,
                                                          hd) / np.sqrt(hd)
     k = matmul_any(xm, p["wk"], dtype, impl=impl).reshape(bsz, l, nh,
@@ -319,7 +319,7 @@ def slstm_apply(p, x: jax.Array, cfg: ModelConfig, *, cache=None):
     bsz, l, d = x.shape
     h0 = layers.apply_norm(p["ln"], x, cfg.norm)
     xt = matmul_any(h0, p["w_in"], jnp.float32,
-                    impl=cfg.sac_impl)                     # [B, L, 4d]
+                    impl=cfg.impl)                     # [B, L, 4d]
     if cache is None:
         state = tuple(jnp.zeros((bsz, d), jnp.float32) for _ in range(3))
     else:
@@ -336,7 +336,7 @@ def slstm_apply(p, x: jax.Array, cfg: ModelConfig, *, cache=None):
         state, ys = jax.lax.scan(step, state, jnp.moveaxis(xt, 1, 0))
         ys = jnp.moveaxis(ys, 0, 1)
     y = layers.apply_norm(p["out_norm"], ys.astype(dtype), "rmsnorm")
-    out = matmul_any(y, p["w_out"], dtype, impl=cfg.sac_impl)
+    out = matmul_any(y, p["w_out"], dtype, impl=cfg.impl)
     return x + out, state
 
 

@@ -3,7 +3,7 @@
 The transformer serving stack runs every ``_KNEADABLE`` projection through
 the kneaded bit-plane form: stacked [L, K, N] scan-layer weights kneaded per
 layer with a leading schedule axis (``knead_stacked``), dispatched by
-``cfg.sac_impl`` through ``sac_matmul`` — impl="pallas" being the
+``cfg.impl`` through ``sac_matmul`` — impl="pallas" being the
 schedule-compacted kernel's decode-GEMV fast path.  "planes" replays the
 same accumulation order, so whole-model prefill logits, decode-step logits,
 and 32-token greedy generations are asserted BIT-EXACT between the two
@@ -37,7 +37,7 @@ def smol():
 
 
 def _model(cfg, impl):
-    return LanguageModel(dataclasses.replace(cfg, sac_impl=impl))
+    return LanguageModel(dataclasses.replace(cfg, impl=impl))
 
 
 def _pad_cache(cache, cur, to):
@@ -207,7 +207,7 @@ def test_serving_engine_kneaded_close_to_float(smol):
 
 def test_serving_engine_ssm_family_kneaded_parity():
     """SSM-family projections (in_proj/up/down/w_in/w_out/...) dispatch
-    through cfg.sac_impl too — xlstm greedy decode is bit-exact planes vs
+    through cfg.impl too — xlstm greedy decode is bit-exact planes vs
     pallas, so the impl switch cannot silently fall back to the default
     path for non-attention blocks."""
     cfg = get_config("xlstm-1.3b", smoke=True)

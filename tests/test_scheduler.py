@@ -1,0 +1,316 @@
+"""Continuous-batching scheduler invariants (docs/DESIGN.md §9).
+
+The load-bearing guarantee is the acceptance bar of the scheduler PR:
+for the same request set, the continuous step loop produces generations
+**bit-identical** to the batch-synchronous drain() path — per-row decode
+is independent of batch composition and padded cache extent, for the
+planes and pallas impls alike.  Around that: admission order under
+priority ties, cancel freeing KV blocks mid-decode, slot reuse being
+bit-exact vs a fresh engine, the KV pool's reservation arithmetic, the
+request-handle API, and the config impl-alias shims.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config
+from repro.inference.engine import ServingConfig, ServingEngine
+from repro.inference.frontend import (DeadlineExceeded, RequestHandle,
+                                      validate_buckets)
+from repro.inference.kv_pool import KVBlockPool, PoolExhausted
+from repro.models.lm import LanguageModel
+
+MIN_DIM = 8      # knead smoke-size projections too
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get_config("smollm-360m", smoke=True)
+    params = LanguageModel(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(smol, scheduler="continuous", impl="float", **kw):
+    cfg, params = smol
+    defaults = dict(max_len=48, impl=impl, knead_min_dim=MIN_DIM,
+                    buckets=(1, 2, 4), scheduler=scheduler, max_inflight=3,
+                    kv_block=16)
+    defaults.update(kw)
+    return ServingEngine(cfg, params, ServingConfig(**defaults))
+
+
+def _submit_set(eng, cfg, spec=((6, 5), (6, 3), (9, 4), (4, 1), (6, 6))):
+    handles = []
+    for i, (plen, n) in enumerate(spec):
+        toks = jax.random.randint(jax.random.PRNGKey(50 + i), (plen,), 0,
+                                  cfg.vocab_size)
+        handles.append(eng.submit(toks, n))
+    return handles
+
+
+# ------------------------------------------------------------- KV pool
+
+
+def test_kv_pool_reservations():
+    pool = KVBlockPool(num_slots=4, max_len=64, block=16)
+    assert pool.total_blocks == 16 and pool.extent() == 0
+    t0 = pool.alloc(0, 40)                     # ceil(40/16) = 3 blocks
+    assert len(t0) == 3 and pool.used_blocks == 3
+    assert pool.slot_extent(0) == 48 and pool.extent() == 48
+    pool.alloc(1, 10)
+    assert pool.extent() == 48                 # high-water over live slots
+    assert pool.free(0) == 3
+    assert pool.extent() == 16                 # shrinks when the long one goes
+    assert pool.free(0) == 0                   # double-free is a no-op
+    with pytest.raises(ValueError):
+        pool.alloc(1, 8)                       # slot already reserved
+
+
+def test_kv_pool_exhaustion_and_fits():
+    pool = KVBlockPool(num_slots=2, max_len=64, block=16, total_tokens=64)
+    assert pool.fits(64) and not pool.fits(65)
+    pool.alloc(0, 50)                          # 4 of 4 blocks
+    assert not pool.can_admit(1)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(1, 1)
+    pool.free(0)
+    assert pool.can_admit(64)
+
+
+def test_kv_pool_dense_fallback():
+    pool = KVBlockPool(num_slots=2, max_len=32, block=0)   # dense rows
+    assert pool.block == 32 and pool.total_blocks == 2
+    pool.alloc(0, 5)
+    assert pool.slot_extent(0) == 32           # whole-row granularity
+
+
+# ---------------------------------------------------- bucket validation
+
+
+def test_validate_buckets_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="non-empty"):
+        validate_buckets(())
+    with pytest.raises(ValueError, match="ascending"):
+        validate_buckets((4, 2))
+    with pytest.raises(ValueError, match="ascending"):
+        validate_buckets((0, 2))
+    validate_buckets((1, 2, 8))                # fine
+
+
+# --------------------------------------------------- config alias shims
+
+
+def test_model_config_impl_alias_pinned():
+    cfg = ModelConfig()
+    assert cfg.impl == "int"                   # canonical field + default
+    with pytest.warns(DeprecationWarning):
+        legacy = ModelConfig(sac_impl="planes")
+    assert legacy.impl == "planes"
+    with pytest.warns(DeprecationWarning):
+        via_replace = dataclasses.replace(cfg, sac_impl="pallas")
+    assert via_replace.impl == "pallas"
+    # canonical spelling round-trips silently and sticks through replace —
+    # a stale alias copy must never clobber an explicit impl=
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        c2 = dataclasses.replace(cfg, impl="planes")
+        c3 = dataclasses.replace(c2, num_layers=1)
+    assert (c2.impl, c3.impl) == ("planes", "planes")
+    # the alias is consumed at construction: normalized storage is None
+    assert via_replace.sac_impl is None
+
+
+def test_engine_threads_impl_into_model_config(smol):
+    eng = _engine(smol, impl="int")
+    assert eng.cfg.impl == "int"
+
+
+# ------------------------------------------- continuous-vs-batch parity
+
+
+@pytest.mark.parametrize("impl", ["planes", "pallas"])
+def test_continuous_matches_batch_drain_bitwise(smol, impl):
+    """The acceptance bar: identical request set, bit-identical tokens out
+    of both schedulers, through both kneaded SAC execution paths."""
+    cfg, _ = smol
+    spec = ((6, 4), (6, 2), (9, 3), (4, 1))
+    eb = _engine(smol, scheduler="batch", impl=impl)
+    ec = _engine(smol, scheduler="continuous", impl=impl, max_inflight=2)
+    hb, hc = _submit_set(eb, cfg, spec), _submit_set(ec, cfg, spec)
+    rb, rc = eb.drain(), ec.drain()
+    assert sorted(rb) == sorted(rc) == sorted(int(h) for h in hb)
+    for rid in rb:
+        assert np.array_equal(np.asarray(rb[rid]), np.asarray(rc[rid])), rid
+    assert eb.drain() == {} and ec.drain() == {}
+
+
+def test_slot_reuse_bit_exact_vs_fresh_engine(smol):
+    """A second wave through recycled slots (and a shrunk-then-regrown KV
+    pool) must match a fresh engine serving only that wave."""
+    cfg, _ = smol
+    wave2 = ((7, 4), (5, 3), (7, 2))
+    used = _engine(smol)
+    _submit_set(used, cfg)                     # wave 1 dirties every slot
+    used.drain()
+    fresh = _engine(smol)
+    h_used = _submit_set(used, cfg, wave2)
+    h_fresh = _submit_set(fresh, cfg, wave2)
+    r_used, r_fresh = used.drain(), fresh.drain()
+    for hu, hf in zip(h_used, h_fresh):
+        assert np.array_equal(np.asarray(r_used[hu]),
+                              np.asarray(r_fresh[hf]))
+
+
+# ------------------------------------------------- scheduler invariants
+
+
+def test_admission_order_priority_then_fifo(smol):
+    """Higher priority admits first; FIFO (submit order) within a tie."""
+    cfg, _ = smol
+    eng = _engine(smol, max_inflight=1)        # serialize admissions
+    p = jnp.arange(5) % cfg.vocab_size
+    hs = [eng.submit(p, 2, priority=pr) for pr in (0, 7, 0, 7)]
+    eng.drain()
+    order = [int(h) for h in sorted(hs, key=lambda h: h._req.admit_tick)]
+    assert order == [1, 3, 0, 2]
+
+
+def test_cancel_mid_decode_frees_kv_blocks(smol):
+    cfg, _ = smol
+    eng = _engine(smol, max_inflight=2)
+    p = jnp.arange(6) % cfg.vocab_size
+    h1, h2 = eng.submit(p, 20), eng.submit(p, 20)
+    eng.scheduler_step()
+    pool = eng._scheduler.pool
+    assert h1.state == h2.state == "running"
+    before = pool.used_blocks
+    assert h1.cancel() and h1.state == "cancelled"
+    assert pool.used_blocks < before           # its reservation freed NOW
+    assert not h1.cancel()                     # idempotent: already gone
+    out = h2.result()                          # the survivor is unaffected
+    assert out.shape == (20,)
+    assert pool.used_blocks == 0
+    with pytest.raises(RuntimeError, match="cancelled"):
+        h1.result()
+
+
+def test_streaming_yields_every_token_incrementally(smol):
+    cfg, _ = smol
+    eng = _engine(smol)
+    p = jnp.arange(5) % cfg.vocab_size
+    h = eng.submit(p, 6)
+    it = h.stream()
+    first = next(it)
+    assert h.state == "running"                # only stepped as far as needed
+    assert len(h.tokens_so_far()) < 6
+    rest = list(it)
+    assert [first] + rest == h.result().tolist()
+    assert len(rest) == 5
+
+
+def test_deadline_expires_queued_request(smol):
+    import time
+    cfg, _ = smol
+    eng = _engine(smol)
+    p = jnp.arange(4) % cfg.vocab_size
+    doomed = eng.submit(p, 2, deadline=0.0)
+    time.sleep(0.01)
+    ok = eng.submit(p, 2)
+    results = eng.drain()
+    assert doomed.state == "expired"
+    assert int(doomed) not in results and int(ok) in results
+    with pytest.raises(DeadlineExceeded):
+        doomed.result()
+
+
+def test_pool_budget_gates_admission_but_all_complete(smol):
+    """A pool smaller than the slot table forces serialized admission —
+    every request still completes, identically to an unconstrained run."""
+    cfg, _ = smol
+    tight = _engine(smol, max_inflight=3, kv_pool_tokens=32, kv_block=16)
+    roomy = _engine(smol, max_inflight=3)
+    spec = ((6, 4), (6, 3), (6, 2))
+    ht, hr = _submit_set(tight, cfg, spec), _submit_set(roomy, cfg, spec)
+    rt, rr = tight.drain(), roomy.drain()
+    assert sorted(rt) == sorted(rr)
+    for a, b in zip(ht, hr):
+        assert np.array_equal(np.asarray(rt[a]), np.asarray(rr[b]))
+    # and a request that could NEVER fit the pool fails loudly at submit
+    with pytest.raises(ValueError, match="pool"):
+        tight.submit(jnp.arange(30) % cfg.vocab_size, 10)
+
+
+# --------------------------------------------------- request-handle API
+
+
+def test_handle_is_int_compatible(smol):
+    cfg, _ = smol
+    eng = _engine(smol)
+    hs = _submit_set(eng, cfg, ((4, 2), (4, 2)))
+    assert all(isinstance(h, (int, RequestHandle)) for h in hs)
+    assert sorted(hs) == [0, 1] and hs[0] == 0 and {hs[0]: "x"}[0] == "x"
+    assert hs[1].priority == 0 and hs[1].deadline is None
+    results = eng.drain()
+    assert np.array_equal(np.asarray(results[hs[0]]),
+                          np.asarray(hs[0].result()))
+
+
+def test_batch_mode_handles_and_latency_breakdown(smol):
+    """The handle API works on the wave-synchronous path too (result()
+    drains), and latency_stats grows the queue-wait/decode split."""
+    cfg, _ = smol
+    eng = _engine(smol, scheduler="batch")
+    hs = _submit_set(eng, cfg, ((4, 2), (4, 3)))
+    out = hs[0].result()                       # triggers a full drain
+    assert out.shape == (2,) and hs[1].state == "done"
+    assert list(hs[1].stream()) == hs[1].result().tolist()
+    stats = eng.latency_stats()
+    for key in ("queue_wait_p50_ms", "queue_wait_p95_ms",
+                "decode_p50_ms", "decode_p95_ms", "p95_ms"):
+        assert key in stats
+    with pytest.raises(ValueError, match="continuous"):
+        eng.scheduler_step()
+
+
+def test_submit_validation_errors(smol):
+    cfg, _ = smol
+    eng = _engine(smol)
+    with pytest.raises(ValueError, match="one prompt"):
+        eng.submit(jnp.zeros((2, 4), jnp.int32), 2)
+    with pytest.raises(ValueError, match="num_tokens"):
+        eng.submit(jnp.arange(4), 0)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(jnp.arange(40), 20)
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.submit(jnp.zeros((0,), jnp.int32), 2)
+
+
+def test_continuous_rejects_side_input_families():
+    cfg = get_config("llama-3.2-vision-90b", smoke=True)
+    params = LanguageModel(cfg).init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="batch"):
+        ServingEngine(cfg, params,
+                      ServingConfig(max_len=64, impl="float",
+                                    scheduler="continuous"))
+
+
+def test_cnn_submit_validates_image_shape():
+    from repro.inference.cnn_engine import CNNServingConfig, CNNServingEngine
+    from repro.models import cnn
+
+    cfg = dataclasses.replace(cnn.CNN_ZOO["alexnet"], image_size=16)
+    params = cnn.init(jax.random.PRNGKey(0), cfg)
+    eng = CNNServingEngine(cfg, params, CNNServingConfig(impl="int"))
+    with pytest.raises(ValueError, match="does not match"):
+        eng.submit(jnp.zeros((8, 8, 3)))       # wrong H, W
+    with pytest.raises(ValueError, match="does not match"):
+        eng.submit(jnp.zeros((16, 16, 1)))     # wrong channels
+    h = eng.submit(jnp.zeros((16, 16, 3)))
+    out = eng.drain()
+    assert np.array_equal(np.asarray(out[h]), np.asarray(h.result()))
+    assert "queue_wait_p50_ms" in eng.latency_stats()
