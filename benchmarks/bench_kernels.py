@@ -450,10 +450,97 @@ def serving_load_sweep(quick: bool) -> List[BenchRow]:
     return rows
 
 
+def serving_fault_sweep(quick: bool) -> List[BenchRow]:
+    """Goodput + tail latency under injected fault rates (~0/1/5% of
+    decode launch attempts) on the continuous scheduler with the fault
+    policy armed (docs/DESIGN.md §10).
+
+    Deterministic end to end: tick-space Poisson arrivals with a fixed
+    seed, fault injection at fixed decode-attempt indices, and
+    ``retry_backoff_s=0`` so recovery scheduling never consults the wall
+    clock — ``failed_requests``, ``retries`` and the tick-space latency
+    percentiles are exact across runs and join the CI regression gate
+    (a fault-handling change that starts losing requests or retrying
+    more trips the gate).  Wall-clock goodput (completed tokens/s, the
+    paid-for metric under faults) is reported but not gated.  The rate-0
+    row runs with the policy armed too, so it prices the NaN-guard +
+    watchdog overhead against serving_load_sweep's unguarded continuous
+    rows.
+    """
+    from repro.configs.registry import get_config
+    from repro.inference.engine import ServingConfig, ServingEngine
+    from repro.inference.resilience import (EngineFaultInjector,
+                                            ServingFaultPolicy)
+    from repro.models.lm import LanguageModel
+
+    cfg = get_config("smollm-360m", smoke=True)
+    params = LanguageModel(cfg).init(jax.random.PRNGKey(0))
+    n_req = 8 if quick else 16
+    plens = [6, 10, 4, 6]
+    budgets = [4, 8, 2, 6]
+    prompts = [jax.random.randint(jax.random.PRNGKey(100 + i),
+                                  (plens[i % 4],), 0, cfg.vocab_size)
+               for i in range(n_req)]
+    rng = np.random.default_rng(4321)
+    arrivals = np.cumsum(rng.poisson(4, size=n_req)).tolist()
+    # ~rate of the ≈30 (quick) / ≈65 decode attempts the trace generates;
+    # fixed indices, NOT sampled, so every run injects identically
+    fault_plans = (("0pct", ()),
+                   ("1pct", (8,) if quick else (25,)),
+                   ("5pct", (5, 12, 19) if quick else (5, 12, 19, 33, 47)))
+
+    rows: List[BenchRow] = []
+    for label, fail_steps in fault_plans:
+        pol = ServingFaultPolicy(
+            max_retries=3, retry_backoff_s=0.0,
+            injector=(EngineFaultInjector(fail_decode_steps=fail_steps)
+                      if fail_steps else None))
+        eng = ServingEngine(cfg, params, ServingConfig(
+            max_len=32, impl="int", knead_min_dim=8, buckets=(1, 2, 4),
+            scheduler="continuous", max_inflight=4, kv_block=16,
+            fault_policy=pol))
+        handles = []
+        i = 0
+        busy = False
+        t0 = time.perf_counter()
+        while i < n_req or busy:
+            while i < n_req and arrivals[i] <= eng.ticks:
+                h = eng.submit(prompts[i], budgets[i % 4])
+                h._req.submit_tick = arrivals[i]
+                handles.append(h)
+                i += 1
+            if not busy and i < n_req and not eng._pending:
+                eng.ticks = arrivals[i]            # idle: jump to arrival
+                continue
+            busy = eng.scheduler_step()
+        wall_s = time.perf_counter() - t0
+        stats = eng.latency_stats()
+        done_tokens = sum(h._req.num_tokens for h in handles
+                          if h.state == "done")
+        lat = np.array([r["latency_ticks"] for r in eng._request_log])
+        met = {
+            "failed_requests": stats.get("failed_requests", 0),
+            "retries": stats.get("retries", 0),
+            "p95_latency_ticks": float(np.percentile(lat, 95)),
+            "total_ticks": float(eng.ticks),
+            "goodput_tokens_per_s": done_tokens / wall_s,   # wall: not gated
+        }
+        if not fail_steps:      # clean trace: the policy must be invisible
+            assert met["retries"] == 0 and met["failed_requests"] == 0, met
+        rows.append((
+            f"serving_fault_sweep/continuous@{label}", wall_s * 1e6,
+            f"done={lat.size}/{n_req} retries={met['retries']} "
+            f"failed={met['failed_requests']} "
+            f"p95={met['p95_latency_ticks']:.0f}t "
+            f"goodput={met['goodput_tokens_per_s']:.1f}tok/s", met))
+    return rows
+
+
 def run(quick: bool = False) -> List[BenchRow]:
     return (sac_rows(quick) + alexnet_sweep() + sharded_sweep()
             + decode_sweep(quick) + sharded_decode_sweep(quick)
-            + serving_rows(quick) + serving_load_sweep(quick))
+            + serving_rows(quick) + serving_load_sweep(quick)
+            + serving_fault_sweep(quick))
 
 
 def main(argv: Optional[List[str]] = None) -> None:

@@ -34,10 +34,14 @@ BASELINE = pathlib.Path(__file__).resolve().parent / "artifacts" / \
 # the total stays flat.  The latency-tick metrics come from the
 # serving_load_sweep's fixed Poisson trace on the virtual-launch clock:
 # a scheduler change that makes requests wait more launches, or spends
-# more launches on the same trace, fails the build.
+# more launches on the same trace, fails the build.  failed_requests and
+# retries come from serving_fault_sweep's deterministic fault plan: a
+# fault-handling change that starts losing requests (baseline 0 — any
+# loss fails) or needs more recovery attempts for the same injected
+# faults fails too.
 GATED = ("executed_tile_dots", "cycle_ratio", "max_err",
          "shard_executed_max", "p50_latency_ticks", "p95_latency_ticks",
-         "total_ticks")
+         "total_ticks", "failed_requests", "retries")
 # max_err floor: don't flag 1e-6-scale float noise as a "regression"
 ABS_FLOOR = {"max_err": 1e-4}
 

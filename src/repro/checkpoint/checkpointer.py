@@ -13,6 +13,12 @@ runtime.fault_tolerance for the restart side).
 Elastic restore: leaves are stored unsharded; on restore they are placed
 with ``jax.device_put`` against the *current* mesh's shardings, so the same
 checkpoint restores onto 1 CPU, one pod, or two pods.
+
+Integrity: every leaf's CRC32 (over the exact bytes written to disk) is
+recorded in the manifest at save time and verified on restore — a truncated
+or bit-flipped ``leaf_<i>.npy`` raises :class:`CheckpointCorrupt` naming the
+leaf, instead of ``np.load`` garbage silently entering the restored tree
+(the serving-resilience fault model of docs/DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ import json
 import pathlib
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -30,6 +37,10 @@ PyTree = Any
 
 # numpy cannot serialize bf16 natively; store as uint16 + manifest dtype
 _VIEW_DTYPES = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint leaf failed its integrity check on restore."""
 
 
 def _flatten(tree: PyTree):
@@ -48,12 +59,11 @@ def save(path: str | pathlib.Path, step: int, tree: PyTree) -> pathlib.Path:
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         dt = str(arr.dtype)
-        if dt in _VIEW_DTYPES:
-            np.save(tmp / f"leaf_{i}.npy", arr.view(_VIEW_DTYPES[dt][1]))
-        else:
-            np.save(tmp / f"leaf_{i}.npy", arr)
+        stored = arr.view(_VIEW_DTYPES[dt][1]) if dt in _VIEW_DTYPES else arr
+        np.save(tmp / f"leaf_{i}.npy", stored)
+        crc = zlib.crc32(np.ascontiguousarray(stored).tobytes())
         manifest["leaves"].append(
-            {"dtype": dt, "shape": list(arr.shape)})
+            {"dtype": dt, "shape": list(arr.shape), "crc32": crc})
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
         shutil.rmtree(final)
@@ -73,16 +83,47 @@ def latest_step(path: str | pathlib.Path) -> Optional[int]:
 def restore(path: str | pathlib.Path, step: int, like: PyTree,
             shardings: Optional[PyTree] = None) -> PyTree:
     """Restore into the structure of ``like``; optionally re-shard onto a
-    (possibly different) mesh — the elastic-rescale path."""
+    (possibly different) mesh — the elastic-rescale path.
+
+    Every leaf is verified against its manifest CRC32 before entering the
+    tree; a missing, truncated, or bit-flipped file raises
+    :class:`CheckpointCorrupt` naming the leaf index.  Manifests written
+    before CRCs existed restore without verification (best effort).
+    """
     d = pathlib.Path(path) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
     leaves, treedef = _flatten(like)
+    if len(manifest["leaves"]) != len(leaves):
+        raise CheckpointCorrupt(
+            f"{d}: manifest records {len(manifest['leaves'])} leaves but "
+            f"the restore target has {len(leaves)}")
     out = []
     for i, leaf in enumerate(leaves):
-        arr = np.load(d / f"leaf_{i}.npy")
-        dt = manifest["leaves"][i]["dtype"]
+        fname = d / f"leaf_{i}.npy"
+        entry = manifest["leaves"][i]
+        try:
+            arr = np.load(fname)
+        except Exception as exc:  # noqa: BLE001 — np.load raises a zoo of
+            # types on truncation (ValueError/EOFError/OSError); all mean
+            # the same thing to the caller: this leaf is unreadable.
+            raise CheckpointCorrupt(
+                f"{d}: leaf {i} ({fname.name}) unreadable — "
+                f"{type(exc).__name__}: {exc}") from exc
+        want_crc = entry.get("crc32")
+        if want_crc is not None:
+            got_crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if got_crc != want_crc:
+                raise CheckpointCorrupt(
+                    f"{d}: leaf {i} ({fname.name}) CRC mismatch — "
+                    f"stored {want_crc:#010x}, recomputed {got_crc:#010x} "
+                    f"(dtype={entry['dtype']}, shape={entry['shape']})")
+        dt = entry["dtype"]
         if dt in _VIEW_DTYPES:
             arr = arr.view(_VIEW_DTYPES[dt][0])
+        if list(arr.shape) != list(entry["shape"]):
+            raise CheckpointCorrupt(
+                f"{d}: leaf {i} shape {list(arr.shape)} != manifest "
+                f"{entry['shape']}")
         out.append(arr)
     tree = jax.tree_util.tree_unflatten(treedef, out)
     if shardings is not None:

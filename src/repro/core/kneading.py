@@ -24,18 +24,21 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bitplanes
 from repro.core.quantization import QuantizedTensor, quantize
-from repro.core.schedule import (KneadedSchedule, ShardedKneadedWeight,
+from repro.core.schedule import (KneadedIntegrityError, KneadedSchedule,
+                                 ShardedKneadedWeight,
                                  ShardedStackedKneadedWeight, build_schedule,
-                                 shard_schedule, shard_stacked_schedule)
+                                 integrity_checksums, shard_schedule,
+                                 shard_stacked_schedule, verify_checksums)
 
 __all__ = [
+    "KneadedIntegrityError",
     "KneadedWeight",
     "ShardedKneadedWeight",
     "ShardedStackedKneadedWeight",
@@ -46,6 +49,7 @@ __all__ = [
     "knead_stacked",
     "kneadable_dims",
     "kneaded_codes",
+    "reknead_like",
     "unknead",
     "kneaded_cycles",
     "kneading_ratio",
@@ -128,10 +132,41 @@ class KneadedWeight:
     n: int = dataclasses.field(metadata=dict(static=True), default=0)
     k_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
     n_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
+    # knead-time per-field CRC32s ((field, crc) pairs; () = unchecked).
+    # Kneading is an exact re-encoding, so a silently corrupted plane,
+    # presence word, or schedule entry changes *which work executes* —
+    # detection has to be byte-level, not numeric (docs/DESIGN.md §10).
+    checksums: Tuple[Tuple[str, int], ...] = dataclasses.field(
+        metadata=dict(static=True), default=())
+
+    _INTEGRITY_FIELDS = ("planes", "signs", "scale", "occupancy",
+                         "schedule.counts", "schedule.plane_ids",
+                         "schedule.ktile_ids")
 
     @property
     def shape(self):
         return (self.k, self.n)
+
+    def with_checksums(self) -> "KneadedWeight":
+        """Stamp knead-time CRC32s over every array field (host-side;
+        call outside jit — checksumming forces a device fetch)."""
+        return dataclasses.replace(
+            self, checksums=integrity_checksums(self, self._INTEGRITY_FIELDS))
+
+    def verify(self, strict: bool = False) -> Tuple[str, ...]:
+        """Names of array fields whose bytes changed since knead time.
+
+        Returns an empty tuple when intact (or when no checksums were
+        recorded — pre-integrity weights verify vacuously).  ``strict``
+        raises :class:`~repro.core.schedule.KneadedIntegrityError` listing
+        the corrupted fields instead of returning them.
+        """
+        bad = verify_checksums(self, self.checksums)
+        if bad and strict:
+            raise KneadedIntegrityError(
+                f"kneaded weight [{self.logical_k}x{self.logical_n}] "
+                f"corrupt in: {', '.join(bad)}")
+        return bad
 
     @property
     def logical_k(self) -> int:
@@ -152,12 +187,14 @@ class KneadedWeight:
 
         The kernel executes the *schedule*, so tampering with occupancy (as
         the skip-semantics tests do) must go through here to take effect.
+        Checksums are re-stamped: this is a *legitimate* re-derivation, not
+        corruption, so the result must verify clean.
         """
         return dataclasses.replace(
             self,
             occupancy=bitplanes.pack_presence(occupancy_map),
             schedule=build_schedule(occupancy_map),
-        )
+        ).with_checksums()
 
     def shard(self, mesh, axis: str = "model") -> ShardedKneadedWeight:
         """Partition this weight + schedule along N for a device mesh (one
@@ -229,7 +266,7 @@ def knead(
         occupancy=bitplanes.pack_presence(occ_map),
         schedule=build_schedule(occ_map),
         bits=qt.bits, ks=ks, n_block=n_block, k=k, n=n,
-    )
+    ).with_checksums()
 
 
 def knead_padded(
@@ -321,7 +358,31 @@ def knead_stacked(
         scale=jnp.stack([kw.scale for kw in per_layer]),
         occupancy=jnp.stack([kw.occupancy for kw in per_layer]),
         schedule=sched,
-    )
+    ).with_checksums()     # re-stamp: layer-0 CRCs don't cover the stack
+
+
+def reknead_like(kw: Union[KneadedWeight, ShardedKneadedWeight],
+                 w_float: jax.Array,
+                 shards: int = 0) -> Union[KneadedWeight,
+                                           ShardedKneadedWeight]:
+    """Repair path: rebuild a (possibly corrupted) kneaded weight from its
+    float source, with the same knead geometry.
+
+    Kneading is deterministic, so the rebuilt weight is bit-identical to the
+    original knead of ``w_float`` — serving that repaired weight produces
+    the same outputs as if the corruption never happened (the resilience
+    layer's weight-repair guarantee, docs/DESIGN.md §10).  ``shards``
+    re-shards stacked/2-D weights when the corrupt weight was sharded
+    (pass the engine's shard count; 0/1 = unsharded).
+    """
+    stacked = w_float.ndim == 3
+    fresh = (knead_stacked if stacked else knead_padded)(
+        w_float, bits=kw.bits, ks=kw.ks, n_block=kw.n_block)
+    if shards > 1 or isinstance(kw, ShardedKneadedWeight):
+        num = shards if shards > 1 else kw.num_shards
+        fresh = (shard_stacked_schedule if stacked
+                 else shard_schedule)(fresh, num)
+    return fresh
 
 
 def kneaded_codes(kw: KneadedWeight) -> jax.Array:

@@ -47,6 +47,7 @@ need no device round-trips.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import TYPE_CHECKING, Tuple, Union
 
 import jax
@@ -56,9 +57,46 @@ import numpy as np
 if TYPE_CHECKING:  # avoid the import cycle (kneading imports this module)
     from repro.core.kneading import KneadedWeight
 
-__all__ = ["KneadedSchedule", "ShardedKneadedWeight",
-           "ShardedStackedKneadedWeight", "build_schedule",
-           "replay_schedule", "shard_schedule", "shard_stacked_schedule"]
+__all__ = ["KneadedIntegrityError", "KneadedSchedule", "ShardedKneadedWeight",
+           "ShardedStackedKneadedWeight", "build_schedule", "replay_schedule",
+           "shard_schedule", "shard_stacked_schedule", "integrity_checksums",
+           "verify_checksums"]
+
+
+class KneadedIntegrityError(RuntimeError):
+    """A kneaded weight's arrays no longer match their knead-time checksums.
+
+    The kneaded form is an *exact* re-encoding (docs/DESIGN.md §2), which is
+    precisely what makes corruption silent and dangerous: a flipped bit in a
+    presence word or schedule array changes *which work items the kernel
+    executes*, not just an output value.  Serving therefore checksums every
+    array at knead time and verifies before trusting restored/transported
+    weights (docs/DESIGN.md §10).
+    """
+
+
+def _crc32(x) -> int:
+    """CRC32 of an array's raw bytes (host-side; forces a device fetch)."""
+    return zlib.crc32(np.ascontiguousarray(np.asarray(x)).tobytes())
+
+
+def _walk(obj, dotted: str):
+    for part in dotted.split("."):
+        obj = getattr(obj, part)
+    return obj
+
+
+def integrity_checksums(obj, fields: Tuple[str, ...]
+                        ) -> Tuple[Tuple[str, int], ...]:
+    """Per-field CRC32s over ``obj``'s (possibly dotted) array fields."""
+    return tuple((name, _crc32(_walk(obj, name))) for name in fields)
+
+
+def verify_checksums(obj, checksums: Tuple[Tuple[str, int], ...]
+                     ) -> Tuple[str, ...]:
+    """Names of fields whose current bytes mismatch ``checksums``."""
+    return tuple(name for name, want in checksums
+                 if _crc32(_walk(obj, name)) != want)
 
 
 @jax.tree_util.register_dataclass
@@ -230,6 +268,28 @@ class ShardedKneadedWeight:
     n: int = dataclasses.field(metadata=dict(static=True), default=0)
     k_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
     n_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
+    # knead/shard-time per-field CRC32s ((field, crc) pairs; () = unchecked)
+    checksums: Tuple[Tuple[str, int], ...] = dataclasses.field(
+        metadata=dict(static=True), default=())
+
+    _INTEGRITY_FIELDS = ("planes", "signs", "scale", "counts",
+                         "plane_ids", "ktile_ids")
+
+    def with_checksums(self) -> "ShardedKneadedWeight":
+        """Stamp shard-time CRC32s over every array field (host-side)."""
+        return dataclasses.replace(
+            self, checksums=integrity_checksums(self, self._INTEGRITY_FIELDS))
+
+    def verify(self, strict: bool = False) -> Tuple[str, ...]:
+        """Names of array fields whose bytes changed since sharding
+        (empty tuple = intact, or no checksums recorded).  ``strict``
+        raises :class:`KneadedIntegrityError` instead."""
+        bad = verify_checksums(self, self.checksums)
+        if bad and strict:
+            raise KneadedIntegrityError(
+                f"sharded kneaded weight [{self.k}x{self.n} "
+                f"s={self.num_shards}] corrupt in: {', '.join(bad)}")
+        return bad
 
     @property
     def shard_n(self) -> int:
@@ -382,7 +442,7 @@ def shard_schedule(kw: "KneadedWeight",
         bits=kw.bits, ks=kw.ks, n_block=kw.n_block,
         k=kw.k, n=n_pad,
         k_orig=kw.k_orig, n_orig=kw.n_orig or (kw.n if pad_tiles else 0),
-    )
+    ).with_checksums()
 
 
 # ---------------------------------------------------------------------------
@@ -547,4 +607,4 @@ def shard_stacked_schedule(kw: "KneadedWeight",
         k_orig=kw.k_orig, n_orig=kw.n_orig or (kw.n if pad_tiles else 0),
         num_layers=layers,
         layer_shard_work=layer_shard_work,
-    )
+    ).with_checksums()

@@ -47,6 +47,7 @@ from repro.core.quantization import quantize
 from repro.core.sac import SAC_IMPLS
 from repro.inference.frontend import (RequestFrontEnd, RequestHandle,
                                       validate_buckets)
+from repro.inference.resilience import ServingFaultPolicy
 from repro.models import cnn
 
 PyTree = Any
@@ -78,6 +79,11 @@ class CNNServingConfig:
     # Per-request log entries retained for latency_stats() — a sliding
     # window, so a long-lived serving process doesn't grow without bound.
     stats_window: int = 4096
+    # Fault handling (docs/DESIGN.md §10).  The CNN path is a single
+    # forward per micro-batch — no retries/slots to recover — so only the
+    # policy's NaN/Inf logit guard applies here: a non-finite logits row
+    # FAILs just that request instead of returning garbage for the batch.
+    fault_policy: Optional[ServingFaultPolicy] = None
 
 
 class CNNServingEngine(RequestFrontEnd):
@@ -177,7 +183,22 @@ class CNNServingEngine(RequestFrontEnd):
             self.ticks += 1                     # one jitted forward launch
             out = jax.block_until_ready(self.logits(xb))[:b]
             done = time.perf_counter()
+            pol = self.scfg.fault_policy
+            bad_rows = set()
+            if pol is not None and pol.nan_guard:
+                import numpy as np
+                finite = np.isfinite(np.asarray(out).astype(np.float32))
+                bad_rows = {i for i in range(b) if not finite[i].all()}
             for i, req in enumerate(chunk):
+                if i in bad_rows:
+                    req.state = fe.FAILED
+                    req.error = "non-finite logits"
+                    req.finish_t = done
+                    req.finish_tick = self.ticks
+                    self._fault_event("nan_quarantined", id=req.id)
+                    self._fault_event("failed_requests", id=req.id,
+                                      reason=req.error)
+                    continue
                 req.state = fe.DONE
                 req.result = out[i]
                 req.admit_t, req.finish_t = start, done

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.inference.frontend import (RequestFrontEnd, RequestHandle,
                                       validate_buckets)
+from repro.inference.resilience import ServingFaultPolicy, verify_kneaded_tree
 from repro.inference.scheduler import ContinuousScheduler
 from repro.core.kneading import (KneadedWeight, ShardedKneadedWeight,
                                  knead_padded, knead_stacked,
@@ -182,6 +183,11 @@ class ServingConfig:
     # continuous: cap on admitted prompt tokens per scheduler step (0 =
     # uncapped) — bounds how much prefill work interleaves one decode step
     prefill_chunk: int = 0
+    # Fault handling (docs/DESIGN.md §10): bounded per-request retries,
+    # NaN-logit quarantine, decode-step watchdog, impl-demotion ladder,
+    # and knead-time checksum verification.  None (default) keeps the
+    # pre-resilience behavior exactly — no guards, exceptions propagate.
+    fault_policy: Optional[ServingFaultPolicy] = None
 
 
 class ServingEngine(RequestFrontEnd):
@@ -207,6 +213,12 @@ class ServingEngine(RequestFrontEnd):
         validate_buckets(scfg.buckets)
         self.scfg = scfg
         self.mesh = None
+        # fault policy keeps the float checkpoint around: the integrity
+        # repair path re-kneads corrupt leaves from it (a tree of
+        # references, not a copy — the caller holds these arrays anyway)
+        self._float_params = params if scfg.fault_policy is not None \
+            else None
+        integrity_report = []
         if scfg.impl in ("quant", "float"):
             self.cfg = cfg
             self.params = (knead_params(params, bits=scfg.quant_bits,
@@ -222,6 +234,12 @@ class ServingEngine(RequestFrontEnd):
                 min_dim=scfg.knead_min_dim, kneaded=True,
                 ks=scfg.knead_ks, n_block=scfg.knead_n_block,
                 shards=scfg.shards)
+            if scfg.fault_policy is not None and \
+                    scfg.fault_policy.verify_weights:
+                # before device placement: a repaired leaf re-kneads on
+                # host, so sharded trees verify pre-device_put
+                self.params, integrity_report = verify_kneaded_tree(
+                    self.params, self._float_params, shards=scfg.shards)
             if scfg.shards > 1:
                 from repro.launch.mesh import make_model_mesh
                 from repro.runtime.sharding import kneaded_shardings
@@ -234,8 +252,67 @@ class ServingEngine(RequestFrontEnd):
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(3,))
         self._init_front_end(scfg.stats_window)
+        for row in integrity_report:
+            self._fault_event("integrity_repairs", **row)
         self._scheduler = (ContinuousScheduler(self)
                            if scfg.scheduler == "continuous" else None)
+
+    # ------------------------------------------- resilience (§10; policy)
+
+    def _demote_impl(self, reason: str) -> bool:
+        """Graceful degradation: move one rung down the fault policy's
+        ``fallback_impls`` ladder and rebuild the jitted model functions.
+
+        Possible because every SAC impl dispatches per call on the same
+        :class:`~repro.core.kneading.KneadedWeight` params
+        (``matmul_any -> sac_matmul``) — no re-kneading, no new device
+        placement, just a re-jit.  ``pallas -> planes`` preserves the
+        bit-exactness guarantee (planes is the kernel's bitwise oracle);
+        ``planes -> float`` trades exactness for availability and is why
+        every demotion logs a ``degradations`` event.  Returns False —
+        never raises — when no rung remains, the engine is not on a
+        kneaded impl, or the engine is sharded (sharded work lists are a
+        Pallas-kernel artifact; there is no weaker impl that can read
+        them, docs/DESIGN.md §8).
+        """
+        pol = self.scfg.fault_policy
+        cur = self.scfg.impl
+        if pol is None or not pol.fallback_impls:
+            return False
+        if cur in ("quant", "float") or self.scfg.shards > 1:
+            return False
+        ladder = list(pol.fallback_impls)
+        if cur in ladder:
+            nxt = ladder[ladder.index(cur) + 1] \
+                if ladder.index(cur) + 1 < len(ladder) else None
+        else:
+            nxt = ladder[0]       # e.g. pallas -> head of (planes, float)
+        if nxt is None or nxt == cur or nxt not in SAC_IMPLS:
+            return False
+        self.scfg = dataclasses.replace(self.scfg, impl=nxt)
+        self.cfg = dataclasses.replace(self.cfg, impl=nxt)
+        self.model = LanguageModel(self.cfg)
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(3,))
+        self._fault_event("degradations", impl_from=cur, impl_to=nxt,
+                          reason=reason)
+        return True
+
+    def verify_weights(self, repair: bool = True):
+        """Sweep the serving params for corrupted kneaded leaves (bit
+        flips in planes/signs/occupancy or the compacted schedule arrays,
+        checked against knead-time CRCs).  With ``repair``, corrupt
+        leaves are re-kneaded from the retained float checkpoint —
+        deterministic, hence bit-identical to the never-corrupted leaf.
+        Returns the corruption report (empty = intact); logs one
+        ``integrity_repairs`` event per repaired leaf.
+        """
+        self.params, report = verify_kneaded_tree(
+            self.params, self._float_params, shards=self.scfg.shards,
+            repair=repair)
+        for row in report:
+            self._fault_event("integrity_repairs", **row)
+        return report
 
     def _mesh_ctx(self):
         """Serving-mesh context the sharded kneaded matmuls dispatch under

@@ -32,16 +32,24 @@ from typing import (Any, Deque, Dict, Iterator, List, Optional,
 
 import numpy as np
 
-# Request lifecycle states (docs/DESIGN.md §9 state machine)
+# Request lifecycle states (docs/DESIGN.md §9 state machine; FAILED added
+# by the resilience layer, docs/DESIGN.md §10)
 QUEUED = "queued"        # submitted, waiting for admission
 RUNNING = "running"      # admitted to a slot (continuous) / being drained
 DONE = "done"            # all tokens produced
 CANCELLED = "cancelled"  # withdrawn by cancel()
 EXPIRED = "expired"      # deadline passed before admission
+FAILED = "failed"        # terminal: retries exhausted (fault policy)
+
+TERMINAL = (DONE, CANCELLED, EXPIRED, FAILED)
 
 
 class DeadlineExceeded(RuntimeError):
     """result() on a request whose deadline lapsed before admission."""
+
+
+class RequestFailed(RuntimeError):
+    """result() on a request that exhausted its fault-policy retries."""
 
 
 def validate_buckets(buckets: Sequence[int]) -> None:
@@ -82,6 +90,12 @@ class Request:
     submit_tick: int = 0
     admit_tick: int = 0
     finish_tick: int = 0
+    # resilience bookkeeping (docs/DESIGN.md §10): recovery attempts so
+    # far, the wall-clock instant before which admission must not retry
+    # (exponential-backoff window), and the terminal failure reason.
+    retries: int = 0
+    retry_at: float = 0.0
+    error: Optional[str] = None
 
     @property
     def prompt_len(self) -> int:
@@ -121,6 +135,16 @@ class RequestHandle(int):
     @property
     def deadline(self) -> Optional[float]:
         return self._req.deadline
+
+    @property
+    def retries(self) -> int:
+        """Recovery attempts consumed so far (fault policy; §10)."""
+        return self._req.retries
+
+    @property
+    def error(self) -> Optional[str]:
+        """Terminal failure reason once the request is FAILED."""
+        return self._req.error
 
     def tokens_so_far(self) -> np.ndarray:
         """Tokens generated so far (without blocking)."""
@@ -163,6 +187,23 @@ class RequestFrontEnd:
         # launch.  Deterministic (unlike wall time), so scheduler benches
         # gate latency-in-ticks in CI (bench_kernels serving_load_sweep).
         self.ticks = 0
+        # Resilience telemetry (docs/DESIGN.md §10): monotonic counters
+        # (retries, failed_requests, nan_quarantined, recoveries,
+        # watchdog_timeouts, straggler_steps, degradations, ...) merged
+        # into latency_stats(), plus a bounded event log of the notable
+        # transitions (recoveries, impl demotions, integrity repairs).
+        self._fault_counters: collections.Counter = collections.Counter()
+        self._fault_events: Deque[Dict[str, Any]] = collections.deque(
+            maxlen=stats_window)
+
+    def _fault_event(self, kind: str, **detail: Any) -> None:
+        self._fault_counters[kind] += 1
+        self._fault_events.append({"kind": kind, "tick": self.ticks,
+                                   **detail})
+
+    def fault_events(self) -> List[Dict[str, Any]]:
+        """Notable resilience transitions (bounded sliding window)."""
+        return list(self._fault_events)
 
     def _new_request(self, payload: Any, num_tokens: int = 0, *,
                      priority: int = 0,
@@ -189,6 +230,10 @@ class RequestFrontEnd:
             raise DeadlineExceeded(
                 f"request {req.id} missed its deadline "
                 f"({req.deadline:.3f}s) before admission")
+        if req.state == FAILED:
+            raise RequestFailed(
+                f"request {req.id} failed after {req.retries} retries: "
+                f"{req.error}")
         assert req.state == DONE, req
         return req.result
 
@@ -223,7 +268,9 @@ class RequestFrontEnd:
         """
         lat = np.array([r["latency_ms"] for r in self._request_log])
         if lat.size == 0:
-            return {"requests": 0}
+            return {"requests": 0,
+                    **{k: int(v) for k, v in self._fault_counters.items()
+                       if v}}
         out = {
             "requests": int(lat.size),
             "mean_ms": float(lat.mean()),
@@ -241,5 +288,8 @@ class RequestFrontEnd:
             if vals.size:
                 out[f"{label}_p50_ms"] = float(np.percentile(vals, 50))
                 out[f"{label}_p95_ms"] = float(np.percentile(vals, 95))
+        # resilience counters (docs/DESIGN.md §10): zero-valued keys are
+        # omitted — a fault-free engine's stats look exactly as before
+        out.update({k: int(v) for k, v in self._fault_counters.items() if v})
         return out
 

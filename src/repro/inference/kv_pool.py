@@ -123,3 +123,17 @@ class KVBlockPool:
             return 0
         self._free = sorted(self._free + table)
         return len(table)
+
+    def release_all(self) -> int:
+        """Release every reservation; returns the block count freed.
+
+        The engine-step recovery path (docs/DESIGN.md §10) rebuilds the
+        slot table from scratch — surviving requests re-reserve at
+        re-admission — so the pool must drop all tables at once rather
+        than trust per-slot bookkeeping that a mid-step exception may
+        have left half-updated.
+        """
+        freed = sum(len(t) for t in self._tables.values())
+        self._tables.clear()
+        self._free = list(range(self.total_blocks))
+        return freed

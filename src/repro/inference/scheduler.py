@@ -33,6 +33,19 @@ greedy selection is invariant to the batch rows around it and to the
 padded cache extent beyond the mask — so a request's generation here is
 bit-identical to the batch path's ``generate()`` (regression-tested for
 the planes and pallas impls in tests/test_scheduler.py).
+
+Fault handling (docs/DESIGN.md §10; off unless the engine carries a
+:class:`~repro.inference.resilience.ServingFaultPolicy`): the step loop
+wraps in a recovery path — an engine-step exception requeues every
+in-flight request (bounded per-request retries with backoff, then the
+terminal ``FAILED`` state), rebuilds the slot table and KV pool from
+scratch, and replays survivors from their prompt.  Replay is bit-exact
+for greedy decode: the same row-independence that makes the scheduler
+match ``generate()`` makes a re-admitted request regenerate exactly the
+prefix it had already produced.  A NaN/Inf logit guard quarantines only
+the offending request's row; a :class:`~repro.runtime.fault_tolerance
+.StepTimer` watchdog flags slow/stuck decode launches; repeated step
+faults demote the engine impl down its fallback ladder.
 """
 from __future__ import annotations
 
@@ -45,6 +58,8 @@ import numpy as np
 
 from repro.inference import frontend as fe
 from repro.inference.kv_pool import KVBlockPool
+from repro.inference.resilience import StepTimeout
+from repro.runtime import fault_tolerance as ft
 
 PyTree = Any
 
@@ -82,6 +97,16 @@ class ContinuousScheduler:
         self._axes: Dict[str, Tuple[int, Optional[int]]] = \
             self._detect_axes(engine.model)
         self._key = jax.random.PRNGKey(0)
+        # resilience (docs/DESIGN.md §10): None = pre-resilience behavior
+        self.policy = getattr(scfg, "fault_policy", None)
+        self._timer = (ft.StepTimer(k=self.policy.straggler_k)
+                       if self.policy is not None else None)
+        self._step_idx = 0         # scheduler steps (slot-loss injection key)
+        # launch ATTEMPTS, counted before the launch so a failed one still
+        # advances — a one-shot injected fault index then hits exactly once
+        self._decode_calls = 0     # decode attempts (injection/watchdog key)
+        self._prefill_calls = 0    # prefill attempts (injection key)
+        self._fault_streak = 0     # consecutive failed steps (demotion gate)
 
     # ----------------------------------------------------- cache geometry
 
@@ -187,7 +212,10 @@ class ContinuousScheduler:
         free = self._free_slots()
         if not free or not self.eng._pending:
             return []
-        queue = sorted(self.eng._pending, key=lambda r: (-r.priority, r.id))
+        # retried requests wait out their backoff window before re-admission
+        now = time.perf_counter()
+        queue = sorted((r for r in self.eng._pending if r.retry_at <= now),
+                       key=lambda r: (-r.priority, r.id))
         cap = min(len(free), self.slot_buckets[-1],
                   self.eng.scfg.buckets[-1])
         chunk = self.eng.scfg.prefill_chunk
@@ -231,10 +259,18 @@ class ContinuousScheduler:
         toks = jnp.stack([r.payload for r in group])
         if bucket > len(group):
             toks = jnp.pad(toks, ((0, bucket - len(group)), (0, 0)))
+        # attempt counter advances BEFORE the launch (fault included), so
+        # a retried step moves past a one-shot injected fault index
+        attempt = self._prefill_calls
+        self._prefill_calls += 1
+        if self.policy is not None and self.policy.injector is not None:
+            # after slot/pool assignment, so recovery sees the group live
+            self.policy.injector.maybe_fail_prefill(attempt)
         with self.eng._mesh_ctx():
             logits, pre_cache = self.eng._prefill(self.eng.params,
                                                   {"tokens": toks})
         self.eng.ticks += 1
+        logits, bad_rows = self._guard_logits(logits, group)
         tok0 = np.asarray(self.eng._select(logits, self._next_key()))
         # grow the live cache geometry BEFORE inserting the new rows
         if self._cache is None:
@@ -253,6 +289,11 @@ class ContinuousScheduler:
         else:
             self._resize_cache()
         for i, r in enumerate(group):
+            if i in bad_rows:
+                self.eng._fault_event("nan_quarantined", id=r.id,
+                                      at="prefill")
+                self._requeue_or_fail(r, "non-finite logits at prefill")
+                continue
             r.out.append(int(tok0[i]))
             if len(r.out) >= r.num_tokens:
                 self._retire(r)       # single-token request: done at prefill
@@ -288,31 +329,208 @@ class ContinuousScheduler:
         live = self._live()
         if not live:
             return
+        pol = self.policy
+        attempt = self._decode_calls       # advances even on a failed
+        self._decode_calls += 1            # launch — see _admit
+        if pol is not None and pol.injector is not None:
+            pol.injector.maybe_fail_decode(attempt)
         b = self._batch
         tok = np.zeros((b, 1), np.int32)
         pos = np.zeros((b,), np.int32)
         for slot, r in live:
             tok[slot, 0] = r.out[-1]
             pos[slot] = r.prompt_len + len(r.out) - 1
+        if self._timer is not None:
+            self._timer.start()
         with self.eng._mesh_ctx():
             logits, self._cache = self.eng._decode(
                 self.eng.params, jnp.asarray(tok), jnp.asarray(pos),
                 self._cache)
         self.eng.ticks += 1
+        if self._timer is not None:
+            # the launch is async; time to logits-ready, which the token
+            # select below forces anyway
+            jax.block_until_ready(logits)
+            flagged = len(self._timer.straggler_steps)
+            dt = self._timer.stop(attempt)
+            if len(self._timer.straggler_steps) > flagged:
+                self.eng._fault_counters["straggler_steps"] += 1
+            if pol.step_timeout_s and dt > pol.step_timeout_s:
+                self.eng._fault_event("watchdog_timeouts",
+                                      step=attempt, dt_s=dt)
+                if pol.timeout_is_fault:
+                    # before any token lands: recovery replays the whole
+                    # step, so no request observes a half-applied step
+                    raise StepTimeout(
+                        f"decode launch {attempt} took "
+                        f"{dt:.3f}s > step_timeout_s={pol.step_timeout_s}")
+        rows: List[Optional[fe.Request]] = [None] * b
+        for slot, r in live:
+            rows[slot] = r
+        logits, bad_rows = self._guard_logits(logits, rows)
         nxt = np.asarray(self.eng._select(logits, self._next_key()))
         for slot, r in live:
+            if slot in bad_rows:
+                # row-independence makes surviving rows' cache writes
+                # valid; only this request's state is junk
+                self.eng._fault_event("nan_quarantined", id=r.id,
+                                      at="decode")
+                self._requeue_or_fail(r, "non-finite logits at decode")
+                continue
             r.out.append(int(nxt[slot]))
             if len(r.out) >= r.num_tokens:
                 self._retire(r)
         self._resize_cache()
 
+    # --------------------------------------- fault handling (§10; policy)
+
+    def _guard_logits(self, logits, rows: List[Optional[fe.Request]]):
+        """NaN/Inf quarantine + deterministic poison injection.
+
+        ``rows[i]`` is the request owning logits row ``i`` (None for
+        padding).  Returns ``(logits, bad_rows)`` where ``bad_rows`` are
+        the indices whose request must be quarantined; their rows are
+        zeroed so the batch's token select stays well-defined (the
+        quarantined requests never consume the selected token).
+        """
+        pol = self.policy
+        if pol is None:
+            return logits, set()
+        inj = pol.injector
+        poison = [i for i, r in enumerate(rows)
+                  if r is not None and inj is not None
+                  and inj.poison_request(r.id)]
+        if not pol.nan_guard and not poison:
+            return logits, set()
+        host = np.asarray(logits).copy()
+        for i in poison:
+            host[i] = np.nan
+        bad_rows: set = set()
+        if pol.nan_guard:
+            for i, r in enumerate(rows):
+                if r is not None and not np.isfinite(
+                        host[i].astype(np.float32)).all():
+                    bad_rows.add(i)
+                    host[i] = 0.0
+        return jnp.asarray(host), bad_rows
+
+    def _requeue_or_fail(self, req: fe.Request, reason: str) -> None:
+        """Bounded-retry recovery for one request: free its slot/KV, then
+        either requeue it for full replay (with an exponential-backoff
+        window) or mark it terminally FAILED.
+
+        Replay restarts from the prompt (``out`` resets): re-prefilling
+        ``prompt + generated-prefix`` as one longer sequence would change
+        the matmul M extent and with it the f32 reduction order, breaking
+        bit-exactness (see core/sac.py).  Greedy replay regenerates the
+        identical prefix, so ``stream()`` consumers — whose emitted
+        counter simply stalls until ``out`` regrows — never see a torn or
+        divergent token sequence.
+        """
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            self.pool.free(req.slot)
+            req.slot = None
+        req.retries += 1
+        if req.retries > self.policy.max_retries:
+            req.state = fe.FAILED
+            req.error = reason
+            req.finish_t = time.perf_counter()
+            req.finish_tick = self.eng.ticks
+            self.eng._fault_event("failed_requests", id=req.id,
+                                  reason=reason, retries=req.retries - 1)
+            return
+        req.out = []
+        req.state = fe.QUEUED
+        req.retry_at = (time.perf_counter()
+                        + self.policy.backoff_for(req.retries))
+        self.eng._fault_event("retries", id=req.id, reason=reason,
+                              attempt=req.retries)
+        if all(p.id != req.id for p in self.eng._pending):
+            self.eng._pending.append(req)
+
+    def _lose_slots(self) -> None:
+        """Injected device-state loss: the slot's cache rows are junk, so
+        the owning request replays; everything else is untouched."""
+        pol = self.policy
+        if pol is None or pol.injector is None:
+            return
+        hit = False
+        for slot in pol.injector.lost_slots(self._step_idx):
+            r = self.slots[slot] if slot < len(self.slots) else None
+            if r is not None:
+                self.eng._fault_event("slot_losses", id=r.id, slot=slot)
+                self._requeue_or_fail(r, f"slot {slot} device state lost")
+                hit = True
+        if hit:
+            self._resize_cache()
+
+    def _recover(self, exc: Exception) -> None:
+        """Engine-step failure: requeue-or-fail every in-flight request
+        and rebuild the execution state from scratch.
+
+        The decode jit donates the cache (``donate_argnums``), so a
+        launch that raised may have invalidated it — nothing step-level
+        is salvageable.  The slot table, KV pool, and live cache all
+        reset; surviving requests re-admit through the normal path and
+        replay bit-exactly (see :meth:`_requeue_or_fail`).  Repeated
+        faults demote the engine impl down the policy's fallback ladder
+        (pallas -> planes preserves bit-exactness; planes -> float trades
+        it for availability).
+        """
+        self._fault_streak += 1
+        self.eng._fault_event("recoveries",
+                              error=f"{type(exc).__name__}: {exc}",
+                              streak=self._fault_streak)
+        for _, r in self._live():
+            self._requeue_or_fail(r, f"engine step failed: "
+                                     f"{type(exc).__name__}: {exc}")
+        self.slots = [None] * self.capacity
+        self.pool.release_all()     # a mid-step exception may have left
+        self._cache = None          # per-slot bookkeeping half-updated
+        self._batch = self._extent = 0
+        if self._fault_streak >= self.policy.demote_after:
+            if self.eng._demote_impl(
+                    f"{self._fault_streak} consecutive step faults "
+                    f"(last: {type(exc).__name__})"):
+                self._fault_streak = 0
+
+    def _maybe_wait_backoff(self) -> None:
+        """With nothing in flight and every queued request inside its
+        backoff window, sleep to the earliest retry so the step loop
+        stays productive instead of spinning."""
+        if any(r is not None for r in self.slots) or not self.eng._pending:
+            return
+        wait = min(r.retry_at for r in self.eng._pending) \
+            - time.perf_counter()
+        if wait > 0:
+            time.sleep(min(wait, self.policy.backoff_cap_s))
+
     def step(self) -> bool:
         """One scheduler step: expire -> admit (one prefill group) -> one
         decode launch over the slot table -> retire.  Returns True if any
-        request is still queued or in flight."""
-        self._expire()
-        self._admit()
-        self._decode_once()
+        request is still queued or in flight.
+
+        With a fault policy, the step body runs under the recovery
+        umbrella: any exception requeues in-flight work (bounded retries,
+        then FAILED) and rebuilds the slot table — the loop itself never
+        dies to a step fault.
+        """
+        if self.policy is None:
+            self._expire()
+            self._admit()
+            self._decode_once()
+        else:
+            try:
+                self._expire()
+                self._lose_slots()
+                self._admit()
+                self._decode_once()
+                self._fault_streak = 0     # clean step: demotion de-arms
+            except Exception as exc:  # noqa: BLE001 — any step fault
+                self._recover(exc)         # enters bounded recovery
+            self._step_idx += 1
+            self._maybe_wait_backoff()
         return bool(self.eng._pending or any(r is not None
                                              for r in self.slots))
 
@@ -360,8 +578,12 @@ class ContinuousScheduler:
             while emitted < len(req.out):
                 yield req.out[emitted]
                 emitted += 1
-            if req.state in (fe.DONE, fe.CANCELLED, fe.EXPIRED):
-                if req.state != fe.DONE and emitted == 0:
+            if req.state in fe.TERMINAL:
+                # FAILED raises even mid-stream: replay retracted the
+                # emitted prefix, so a silent stop would look like a
+                # short-but-valid completion
+                if req.state == fe.FAILED or \
+                        (req.state != fe.DONE and emitted == 0):
                     self.eng._finished_result(req)   # raise the right error
                 return
             # a queued/running request always keeps step() productive

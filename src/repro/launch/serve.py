@@ -53,6 +53,18 @@ def main():
                     help="continuous scheduler: in-flight slot capacity")
     ap.add_argument("--stream", action="store_true",
                     help="print the first request's tokens as they decode")
+    # resilience knobs (docs/DESIGN.md §10) — any of them arms the fault
+    # policy: bounded retries + NaN quarantine + step watchdog + demotion
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="arm the fault policy: per-request recovery "
+                         "attempts before the terminal FAILED state")
+    ap.add_argument("--step-timeout", type=float, default=None,
+                    help="watchdog threshold in seconds on one decode "
+                         "launch (counts watchdog_timeouts in stats)")
+    ap.add_argument("--fallback-impl", default=None,
+                    help="comma-separated degradation ladder, strongest "
+                         "first (default 'planes,float'): repeated step "
+                         "faults demote --impl down this ladder")
     args = ap.parse_args()
 
     import jax
@@ -77,12 +89,25 @@ def main():
             params = ckpt.restore(args.ckpt_dir, step, like)["params"]
             print(f"restored step {step} from {args.ckpt_dir}")
 
+    fault_policy = None
+    if (args.max_retries is not None or args.step_timeout is not None
+            or args.fallback_impl is not None):
+        from repro.inference.resilience import ServingFaultPolicy
+        fault_policy = ServingFaultPolicy(
+            max_retries=(args.max_retries if args.max_retries is not None
+                         else 2),
+            step_timeout_s=args.step_timeout or 0.0,
+            fallback_impls=(tuple(args.fallback_impl.split(","))
+                            if args.fallback_impl
+                            else ("planes", "float")),
+            verify_weights=bool(args.ckpt_dir))
+
     eng = ServingEngine(cfg, params, ServingConfig(
         max_len=args.prompt_len + args.tokens + 8,
         quant_bits=args.quant, temperature=args.temperature,
         impl=args.impl, knead_min_dim=args.knead_min_dim,
         shards=args.shards, scheduler=args.scheduler,
-        max_inflight=args.max_inflight))
+        max_inflight=args.max_inflight, fault_policy=fault_policy))
     if args.impl in ("int", "planes", "pallas"):
         precision = f"kneaded int{args.quant or 8}"   # engine default: 8
     elif args.impl == "float":
@@ -136,6 +161,14 @@ def main():
                   f"{stats['queue_wait_p95_ms']:.1f} ms | decode p50/p95: "
                   f"{stats['decode_p50_ms']:.1f}/"
                   f"{stats['decode_p95_ms']:.1f} ms")
+    if fault_policy is not None:
+        fault_keys = ("retries", "failed_requests", "recoveries",
+                      "nan_quarantined", "watchdog_timeouts",
+                      "straggler_steps", "degradations",
+                      "integrity_repairs")
+        counters = {k: stats[k] for k in fault_keys if k in stats}
+        print(f"fault counters: {counters or 'clean'} "
+              f"(impl now {eng.scfg.impl})")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ Components:
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 from typing import Callable, Iterable, List, Optional
 
@@ -27,9 +28,31 @@ class InjectedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class RestartPolicy:
+    """Bounded retries with capped, optionally jittered exponential backoff.
+
+    ``backoff_cap_s`` bounds the exponential growth (a long fault streak
+    must not sleep for hours); ``jitter_frac`` adds up to that fraction of
+    uniform random extra sleep so restarting replicas de-synchronize
+    (thundering-herd avoidance) — 0.0 keeps sleeps deterministic for tests.
+    """
+
     max_restarts: int = 3
     backoff_s: float = 0.1
     backoff_mult: float = 2.0
+    backoff_cap_s: float = 30.0
+    jitter_frac: float = 0.0
+
+    def sleep_s(self, backoff: float, rng: Optional[random.Random] = None
+                ) -> float:
+        """Actual sleep for a nominal backoff: capped, plus jitter."""
+        base = min(backoff, self.backoff_cap_s)
+        if self.jitter_frac <= 0.0:
+            return base
+        r = rng.random() if rng is not None else random.random()
+        return base * (1.0 + self.jitter_frac * r)
+
+    def next_backoff(self, backoff: float) -> float:
+        return min(backoff * self.backoff_mult, self.backoff_cap_s)
 
 
 @dataclasses.dataclass
@@ -77,10 +100,19 @@ def run_resilient_loop(
     num_steps: int,
     step_fn: Callable[[int], None],
     restore_fn: Callable[[], int],
-    policy: RestartPolicy = RestartPolicy(),
+    policy: Optional[RestartPolicy] = None,
 ) -> int:
     """Run ``step_fn(step)`` for steps [start, num_steps); on exception,
-    call ``restore_fn() -> resume_step`` and continue.  Returns restarts."""
+    call ``restore_fn() -> resume_step`` and continue.  Returns restarts.
+
+    Backoff resets to ``policy.backoff_s`` after any successful step — only
+    *consecutive* faults escalate the sleep — and is capped at
+    ``policy.backoff_cap_s`` with optional jitter (see
+    :meth:`RestartPolicy.sleep_s`).  The default policy is constructed per
+    call: a dataclass instance in the signature would be shared across every
+    caller of the loop (the classic mutable-default trap).
+    """
+    policy = RestartPolicy() if policy is None else policy
     restarts = 0
     backoff = policy.backoff_s
     step = start_step
@@ -88,11 +120,12 @@ def run_resilient_loop(
         try:
             step_fn(step)
             step += 1
+            backoff = policy.backoff_s         # clean step: de-escalate
         except Exception:  # noqa: BLE001 — any fault triggers the restart path
             restarts += 1
             if restarts > policy.max_restarts:
                 raise
-            time.sleep(backoff)
-            backoff *= policy.backoff_mult
+            time.sleep(policy.sleep_s(backoff))
+            backoff = policy.next_backoff(backoff)
             step = restore_fn()
     return restarts
