@@ -31,7 +31,11 @@ BASELINE = pathlib.Path(__file__).resolve().parent / "artifacts" / \
 # is the sharded sweep's critical-path load: the MXU passes the most-loaded
 # device of the 4-shard partition executes — a PR that skews the N-shard
 # balance (or inflates any shard's work list) by >tolerance fails even if
-# the total stays flat.  The latency-tick metrics come from the
+# the total stays flat.  shard_imbalance is the same skew as a ratio
+# (max / mean shard work): the balanced-partition rows baseline it at
+# ~1.0, so a packing change that un-balances an LPT row fails even when
+# absolute work counts move with an intended schedule change.  The
+# latency-tick metrics come from the
 # serving_load_sweep's fixed Poisson trace on the virtual-launch clock:
 # a scheduler change that makes requests wait more launches, or spends
 # more launches on the same trace, fails the build.  failed_requests and
@@ -40,8 +44,8 @@ BASELINE = pathlib.Path(__file__).resolve().parent / "artifacts" / \
 # loss fails) or needs more recovery attempts for the same injected
 # faults fails too.
 GATED = ("executed_tile_dots", "cycle_ratio", "max_err",
-         "shard_executed_max", "p50_latency_ticks", "p95_latency_ticks",
-         "total_ticks", "failed_requests", "retries")
+         "shard_executed_max", "shard_imbalance", "p50_latency_ticks",
+         "p95_latency_ticks", "total_ticks", "failed_requests", "retries")
 # max_err floor: don't flag 1e-6-scale float noise as a "regression"
 ABS_FLOOR = {"max_err": 1e-4}
 

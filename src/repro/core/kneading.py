@@ -196,15 +196,19 @@ class KneadedWeight:
             schedule=build_schedule(occupancy_map),
         ).with_checksums()
 
-    def shard(self, mesh, axis: str = "model") -> ShardedKneadedWeight:
+    def shard(self, mesh, axis: str = "model",
+              partition: str = "contiguous") -> ShardedKneadedWeight:
         """Partition this weight + schedule along N for a device mesh (one
         compacted work list per shard; see
         :func:`repro.core.schedule.shard_schedule` / docs/DESIGN.md §5).
         A stacked [L, K, N] weight (:func:`knead_stacked`) shards per layer
-        into a :class:`ShardedStackedKneadedWeight` (docs/DESIGN.md §8)."""
+        into a :class:`ShardedStackedKneadedWeight` (docs/DESIGN.md §8).
+        ``partition="balanced"`` LPT-packs tiles on their static occupancy
+        instead of contiguous slabs (docs/DESIGN.md §11)."""
         if self.planes.ndim == 4:
-            return shard_stacked_schedule(self, mesh, axis=axis)
-        return shard_schedule(self, mesh, axis=axis)
+            return shard_stacked_schedule(self, mesh, axis=axis,
+                                          partition=partition)
+        return shard_schedule(self, mesh, axis=axis, partition=partition)
 
     def metadata_bytes(self) -> int:
         """Pass-mark metadata footprint: packed presence bits + the
@@ -373,15 +377,19 @@ def reknead_like(kw: Union[KneadedWeight, ShardedKneadedWeight],
     the same outputs as if the corruption never happened (the resilience
     layer's weight-repair guarantee, docs/DESIGN.md §10).  ``shards``
     re-shards stacked/2-D weights when the corrupt weight was sharded
-    (pass the engine's shard count; 0/1 = unsharded).
+    (pass the engine's shard count; 0/1 = unsharded).  Sharded rebuilds
+    keep the original weight's ``partition`` mode — a balanced weight
+    repairs to the identical LPT packing (deterministic on identical
+    counts), so the repair stays bit-identical.
     """
     stacked = w_float.ndim == 3
     fresh = (knead_stacked if stacked else knead_padded)(
         w_float, bits=kw.bits, ks=kw.ks, n_block=kw.n_block)
     if shards > 1 or isinstance(kw, ShardedKneadedWeight):
         num = shards if shards > 1 else kw.num_shards
+        partition = getattr(kw, "partition", "contiguous")
         fresh = (shard_stacked_schedule if stacked
-                 else shard_schedule)(fresh, num)
+                 else shard_schedule)(fresh, num, partition=partition)
     return fresh
 
 

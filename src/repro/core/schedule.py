@@ -35,6 +35,20 @@ of distributing the compacted work list rather than the dense iteration
 space — and :meth:`ShardedKneadedWeight.imbalance` reports how unevenly the
 occupancy landed.
 
+**Balanced sharding** (``partition="balanced"``, docs/DESIGN.md §11):
+contiguous slabs inherit whatever skew the occupancy happens to carry — a
+column-pruned layer can land all of its work on shard 0 while shard 3 idles.
+Because per-tile work is static, the partitioner can do better at shard
+time: LPT greedy bin-packing assigns tiles (largest count first) to the
+least-loaded shard with free capacity, and the tile→slot permutation is
+recorded in ``tile_slot`` so the execution layer can gather the output
+columns back into original order.  Per-tile work lists and their k-major
+order are untouched — only *which shard runs which tile* changes — so the
+per-tile f32 accumulation sequence, and therefore the output bits, are
+identical to the contiguous and unsharded kernels.  All-empty padding tiles
+participate in the packing as zero-cost filler, so indivisible tile counts
+never inflate ``shard_work`` (contiguous mode pins them to the last shard).
+
 **Stacked sharding** (:func:`shard_stacked_schedule`, docs/DESIGN.md §8):
 the LM stacks scan-layer weights as [L, K, N] with per-layer schedules
 (``knead_stacked``); sharding applies the same N partition to every layer,
@@ -219,6 +233,71 @@ def replay_schedule(a, kw) -> jax.Array:
 # N-sharded schedules (docs/DESIGN.md §5)
 # ---------------------------------------------------------------------------
 
+PARTITIONS = ("contiguous", "balanced")
+
+
+def _lpt_tile_slots(counts: np.ndarray, num_shards: int,
+                    tiles_per_shard: int) -> np.ndarray:
+    """LPT bin-packing of N-tiles onto shards with per-shard tile capacity.
+
+    Longest-Processing-Time greedy: visit tiles by occupancy count
+    descending (stable order, so equal counts keep their tile-index order)
+    and place each on the least-loaded shard that still has a free tile
+    slot, lowest shard index on ties.  Padding tiles (count 0) participate
+    like any other tile — they fill leftover capacity and add no load.
+    Deterministic: same counts => same packing, which the integrity
+    checksums and the repair path rely on.
+
+    Returns int32 ``slot`` with ``slot[j] = s * tiles_per_shard + p``: tile
+    ``j`` lands in position ``p`` of shard ``s``.  ``slot`` is a bijection
+    on ``range(num_shards * tiles_per_shard)`` — every tile is placed
+    exactly once, every slot filled exactly once.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    total = num_shards * tiles_per_shard
+    if counts.shape != (total,):
+        raise ValueError(f"expected {total} padded tiles, got {counts.shape}")
+    order = np.argsort(-counts, kind="stable")     # heaviest first
+    load = np.zeros(num_shards, dtype=np.int64)
+    fill = np.zeros(num_shards, dtype=np.int64)
+    slot = np.empty(total, dtype=np.int32)
+    for j in order:
+        open_shards = np.flatnonzero(fill < tiles_per_shard)
+        s = open_shards[np.argmin(load[open_shards])]  # argmin: lowest index
+        slot[j] = s * tiles_per_shard + fill[s]
+        load[s] += counts[j]
+        fill[s] += 1
+    return slot
+
+
+def _balanced_tile_slots(counts: np.ndarray, num_shards: int,
+                         tiles_per_shard: int) -> np.ndarray:
+    """Tile→slot assignment for ``partition="balanced"``.
+
+    LPT packing (:func:`_lpt_tile_slots`), falling back to the contiguous
+    identity when that packing's max shard load is *worse*: LPT is a
+    4/3-approximation, so a contiguous layout that happens to be optimal
+    can beat the greedy (e.g. counts ``[3,3,0,2,2,2]`` at 2 shards pack
+    greedily to max 7 while the contiguous slabs hit the optimal 6).
+    Taking the better of the two makes balanced mode never worse than
+    contiguous — the monotonicity the property suite pins.
+    """
+    slot = _lpt_tile_slots(counts, num_shards, tiles_per_shard)
+    counts = np.asarray(counts, dtype=np.int64)
+    lpt_max = np.bincount(slot // tiles_per_shard, weights=counts,
+                          minlength=num_shards).max()
+    cont_max = counts.reshape(num_shards, tiles_per_shard).sum(axis=1).max()
+    if lpt_max <= cont_max:
+        return slot
+    return np.arange(counts.size, dtype=np.int32)
+
+
+def _check_partition(partition: str) -> None:
+    if partition not in PARTITIONS:
+        raise ValueError(f"partition must be one of {PARTITIONS}, "
+                         f"got {partition!r}")
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ShardedKneadedWeight:
@@ -237,9 +316,16 @@ class ShardedKneadedWeight:
       scale:     f32   [S, 1, n/S].
       counts:    int32 [S, T] per-shard work counts (T = tiles_per_shard).
       plane_ids / ktile_ids: int32 [S, T, num_work] per-shard work lists.
+      tile_slot: int32 [S*T] — the tile→slot permutation: original N-tile
+                 ``j`` lives in flattened packed slot ``tile_slot[j]``
+                 (shard ``tile_slot[j] // T``, position ``% T``).  Identity
+                 for ``partition="contiguous"``; for "balanced" it is both
+                 the packing record and, directly, the gather index the
+                 execution layer uses to restore original column order.
       num_shards, num_work, nk, tiles_per_shard: static grid extents; the
                  work dim is padded to the *global* max so every shard runs
                  the same program under shard_map.
+      partition: static partitioning mode ("contiguous" | "balanced").
       shard_work: static per-shard occupancy-nonzero totals (the load each
                  device actually executes per M-step; see :meth:`imbalance`).
       bits, ks, n_block, k, n, k_orig, n_orig: as on ``KneadedWeight``; ``n``
@@ -254,6 +340,7 @@ class ShardedKneadedWeight:
     counts: jax.Array
     plane_ids: jax.Array
     ktile_ids: jax.Array
+    tile_slot: jax.Array
     num_shards: int = dataclasses.field(metadata=dict(static=True), default=1)
     num_work: int = dataclasses.field(metadata=dict(static=True), default=1)
     nk: int = dataclasses.field(metadata=dict(static=True), default=0)
@@ -268,12 +355,14 @@ class ShardedKneadedWeight:
     n: int = dataclasses.field(metadata=dict(static=True), default=0)
     k_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
     n_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
+    partition: str = dataclasses.field(metadata=dict(static=True),
+                                       default="contiguous")
     # knead/shard-time per-field CRC32s ((field, crc) pairs; () = unchecked)
     checksums: Tuple[Tuple[str, int], ...] = dataclasses.field(
         metadata=dict(static=True), default=())
 
     _INTEGRITY_FIELDS = ("planes", "signs", "scale", "counts",
-                         "plane_ids", "ktile_ids")
+                         "plane_ids", "ktile_ids", "tile_slot")
 
     def with_checksums(self) -> "ShardedKneadedWeight":
         """Stamp shard-time CRC32s over every array field (host-side)."""
@@ -354,7 +443,7 @@ class ShardedKneadedWeight:
 
     def metadata_bytes(self) -> int:
         return (self.counts.size + self.plane_ids.size
-                + self.ktile_ids.size) * 4
+                + self.ktile_ids.size + self.tile_slot.size) * 4
 
     def packed_bytes(self) -> int:
         """HBM bytes across all shards: planes + signs + scales + schedule."""
@@ -376,18 +465,31 @@ def _mesh_axis_size(mesh, axis: str) -> int:
 
 def shard_schedule(kw: "KneadedWeight",
                    mesh: Union[int, jax.sharding.Mesh],
-                   axis: str = "model") -> ShardedKneadedWeight:
+                   axis: str = "model",
+                   partition: str = "contiguous") -> ShardedKneadedWeight:
     """Partition a kneaded weight + its schedule along N for a device mesh.
 
-    Each of the ``mesh.shape[axis]`` shards receives a contiguous slab of
-    N-tiles with exactly those tiles' compacted work lists — per-tile items
-    and k-major order unchanged, so sharded outputs are bit-exact against
-    the single-device kernel.  When the N-tile count does not divide the
-    shard count, all-empty padding tiles (count 0, zero weight columns,
-    scale 1.0) are appended so every shard holds ``tiles_per_shard`` tiles;
-    like knead padding, they cost metadata only, never an MXU pass, and the
-    padded output columns sit past ``logical_n`` where callers already
-    slice.
+    ``partition="contiguous"`` (default): each of the ``mesh.shape[axis]``
+    shards receives a contiguous slab of N-tiles with exactly those tiles'
+    compacted work lists — per-tile items and k-major order unchanged, so
+    sharded outputs are bit-exact against the single-device kernel.
+
+    ``partition="balanced"``: tiles are LPT bin-packed onto shards by their
+    static occupancy counts (:func:`_lpt_tile_slots`), so
+    ``max(shard_work)`` approaches ``ceil(total_work / S)`` regardless of
+    where the occupancy landed.  The tile→slot permutation is recorded in
+    ``tile_slot``; the execution layer gathers output N-blocks back into
+    original order (``sac_matmul_pallas_sharded``), and because per-tile
+    work lists and k-major order are untouched, the gathered output is
+    still bit-exact against the single-device kernel (docs/DESIGN.md §11).
+
+    When the N-tile count does not divide the shard count, all-empty
+    padding tiles (count 0, zero weight columns, scale 1.0) are appended so
+    every shard holds ``tiles_per_shard`` tiles; like knead padding, they
+    cost metadata only, never an MXU pass, and the padded output columns
+    sit past ``logical_n`` where callers already slice.  Under "balanced"
+    the padding tiles join the packing as zero-cost filler instead of
+    piling onto the last shard.
 
     Args:
       kw:   a :class:`repro.core.kneading.KneadedWeight`.
@@ -395,10 +497,12 @@ def shard_schedule(kw: "KneadedWeight",
             analysis, e.g. the benchmark imbalance sweeps).
       axis: mesh axis name to shard over (the serving meshes call it
             "model" — out-channel partitioning is tensor parallelism).
+      partition: "contiguous" | "balanced".
     Returns:
       A :class:`ShardedKneadedWeight` with one leading shard axis on every
       array, ready for ``runtime.sharding.kneaded_shardings`` placement.
     """
+    _check_partition(partition)
     sched = kw.schedule
     num = _mesh_axis_size(mesh, axis)
     if num < 1:
@@ -408,6 +512,7 @@ def shard_schedule(kw: "KneadedWeight",
     pad_tiles = tps * num - nn
     pad_cols = pad_tiles * kw.n_block
     n_pad = kw.n + pad_cols
+    total = num * tps
 
     planes, signs = kw.planes, kw.signs
     scale = jnp.broadcast_to(jnp.asarray(kw.scale, jnp.float32)
@@ -422,11 +527,31 @@ def shard_schedule(kw: "KneadedWeight",
         plane_ids = jnp.pad(plane_ids, ((0, pad_tiles), (0, 0)))
         ktile_ids = jnp.pad(ktile_ids, ((0, pad_tiles), (0, 0)))
 
+    host_counts = np.asarray(counts)
+    if partition == "balanced":
+        slot = _balanced_tile_slots(host_counts, num, tps)
+        inv = np.argsort(slot).astype(np.int32)  # inv[s] = tile in slot s
+        inv_j = jnp.asarray(inv)
+        nb_ = kw.bits - 1
+        kwords_ = kw.k // 32
+        planes = jnp.take(planes.reshape(nb_, kwords_, total, kw.n_block),
+                          inv_j, axis=2).reshape(nb_, kwords_, n_pad)
+        signs = jnp.take(signs.reshape(kwords_, total, kw.n_block),
+                         inv_j, axis=1).reshape(kwords_, n_pad)
+        scale = jnp.take(scale.reshape(1, total, kw.n_block),
+                         inv_j, axis=1).reshape(1, n_pad)
+        counts = jnp.take(counts, inv_j, axis=0)
+        plane_ids = jnp.take(plane_ids, inv_j, axis=0)
+        ktile_ids = jnp.take(ktile_ids, inv_j, axis=0)
+        host_counts = host_counts[inv]
+    else:
+        slot = np.arange(total, dtype=np.int32)
+
     shard_n = n_pad // num
     nb = kw.bits - 1
     kwords = kw.k // 32
     shard_work = tuple(
-        int(c) for c in np.asarray(counts).reshape(num, tps).sum(axis=1))
+        int(c) for c in host_counts.reshape(num, tps).sum(axis=1))
     return ShardedKneadedWeight(
         planes=planes.reshape(nb, kwords, num, shard_n).transpose(2, 0, 1, 3),
         signs=signs.reshape(kwords, num, shard_n).transpose(1, 0, 2),
@@ -434,6 +559,7 @@ def shard_schedule(kw: "KneadedWeight",
         counts=counts.reshape(num, tps),
         plane_ids=plane_ids.reshape(num, tps, sched.num_work),
         ktile_ids=ktile_ids.reshape(num, tps, sched.num_work),
+        tile_slot=jnp.asarray(slot),
         num_shards=num,
         num_work=sched.num_work,
         nk=sched.nk,
@@ -442,6 +568,7 @@ def shard_schedule(kw: "KneadedWeight",
         bits=kw.bits, ks=kw.ks, n_block=kw.n_block,
         k=kw.k, n=n_pad,
         k_orig=kw.k_orig, n_orig=kw.n_orig or (kw.n if pad_tiles else 0),
+        partition=partition,
     ).with_checksums()
 
 
@@ -525,7 +652,9 @@ class ShardedStackedKneadedWeight(ShardedKneadedWeight):
 
 def shard_stacked_schedule(kw: "KneadedWeight",
                            mesh: Union[int, jax.sharding.Mesh],
-                           axis: str = "model") -> ShardedStackedKneadedWeight:
+                           axis: str = "model",
+                           partition: str = "contiguous",
+                           ) -> ShardedStackedKneadedWeight:
     """Partition a stacked [L, K, N] kneaded weight along N for a mesh.
 
     ``kw`` is a stacked weight from :func:`repro.core.kneading.knead_stacked`
@@ -538,6 +667,15 @@ def shard_stacked_schedule(kw: "KneadedWeight",
     share the (already cross-layer-padded) ``num_work``, so the whole stack
     runs one kernel program.
 
+    ``partition="balanced"`` repartitions **per layer**: each layer's tiles
+    are LPT-packed on that layer's own counts (occupancy skew is per-layer
+    — one layer's hot tiles are another's empty ones), giving ``tile_slot``
+    a leading layer axis ``[L, S*T]`` that ``jax.lax.scan`` slices together
+    with the weight arrays, so the per-layer gather in the execution layer
+    sees exactly its layer's permutation.  The shared cross-layer
+    ``num_work`` pad is untouched — every layer still runs one kernel
+    program, only its tile→shard placement differs.
+
     Indivisible N-tile counts append all-empty padding tiles per layer (the
     same tiles on every layer — the stack shares [K, N]); padded columns sit
     past ``logical_n`` where callers already slice.
@@ -546,11 +684,13 @@ def shard_stacked_schedule(kw: "KneadedWeight",
       kw:   a *stacked* :class:`repro.core.kneading.KneadedWeight`.
       mesh: target mesh or plain int shard count (host-side analysis).
       axis: mesh axis name for the shard dimension.
+      partition: "contiguous" | "balanced" (per-layer LPT).
     Returns:
       A :class:`ShardedStackedKneadedWeight` with axes ``[L, S, ...]`` —
       scan-sliceable per layer, shard axis placed by
       ``runtime.sharding.kneaded_shardings``.
     """
+    _check_partition(partition)
     sched = kw.schedule
     if kw.planes.ndim != 4:
         raise ValueError("shard_stacked_schedule expects a stacked kneaded "
@@ -565,6 +705,7 @@ def shard_stacked_schedule(kw: "KneadedWeight",
     pad_tiles = tps * num - nn
     pad_cols = pad_tiles * kw.n_block
     n_pad = kw.n + pad_cols
+    total = num * tps
 
     planes, signs = kw.planes, kw.signs                  # [L, B-1, K/32, N]
     scale = jnp.broadcast_to(
@@ -581,10 +722,38 @@ def shard_stacked_schedule(kw: "KneadedWeight",
         plane_ids = jnp.pad(plane_ids, ((0, 0), (0, pad_tiles), (0, 0)))
         ktile_ids = jnp.pad(ktile_ids, ((0, 0), (0, pad_tiles), (0, 0)))
 
+    host_counts = np.asarray(counts)                      # [L, total]
+    if partition == "balanced":
+        slot = np.stack([_balanced_tile_slots(host_counts[layer], num, tps)
+                         for layer in range(layers)])     # [L, total]
+        inv = np.argsort(slot, axis=1).astype(np.int32)
+        inv_j = jnp.asarray(inv)
+        nb_ = kw.bits - 1
+        kwords_ = kw.k // 32
+        planes = jnp.take_along_axis(
+            planes.reshape(layers, nb_, kwords_, total, kw.n_block),
+            inv_j[:, None, None, :, None], axis=3,
+        ).reshape(layers, nb_, kwords_, n_pad)
+        signs = jnp.take_along_axis(
+            signs.reshape(layers, kwords_, total, kw.n_block),
+            inv_j[:, None, :, None], axis=2,
+        ).reshape(layers, kwords_, n_pad)
+        scale = jnp.take_along_axis(
+            scale.reshape(layers, 1, total, kw.n_block),
+            inv_j[:, None, :, None], axis=2,
+        ).reshape(layers, 1, n_pad)
+        counts = jnp.take_along_axis(counts, inv_j, axis=1)
+        plane_ids = jnp.take_along_axis(plane_ids, inv_j[:, :, None], axis=1)
+        ktile_ids = jnp.take_along_axis(ktile_ids, inv_j[:, :, None], axis=1)
+        host_counts = np.take_along_axis(host_counts, inv, axis=1)
+    else:
+        slot = np.broadcast_to(np.arange(total, dtype=np.int32),
+                               (layers, total)).copy()
+
     shard_n = n_pad // num
     nb = kw.bits - 1
     kwords = kw.k // 32
-    per_layer_work = np.asarray(counts).reshape(layers, num, tps).sum(axis=2)
+    per_layer_work = host_counts.reshape(layers, num, tps).sum(axis=2)
     layer_shard_work = tuple(tuple(int(c) for c in row)
                              for row in per_layer_work)
     shard_work = tuple(int(c) for c in per_layer_work.sum(axis=0))
@@ -597,6 +766,7 @@ def shard_stacked_schedule(kw: "KneadedWeight",
         counts=counts.reshape(layers, num, tps),
         plane_ids=plane_ids.reshape(layers, num, tps, sched.num_work),
         ktile_ids=ktile_ids.reshape(layers, num, tps, sched.num_work),
+        tile_slot=jnp.asarray(slot),
         num_shards=num,
         num_work=sched.num_work,
         nk=sched.nk,
@@ -605,6 +775,7 @@ def shard_stacked_schedule(kw: "KneadedWeight",
         bits=kw.bits, ks=kw.ks, n_block=kw.n_block,
         k=kw.k, n=n_pad,
         k_orig=kw.k_orig, n_orig=kw.n_orig or (kw.n if pad_tiles else 0),
+        partition=partition,
         num_layers=layers,
         layer_shard_work=layer_shard_work,
     ).with_checksums()

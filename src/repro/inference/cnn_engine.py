@@ -71,6 +71,9 @@ class CNNServingConfig:
     # mesh devices (0/1 = single device).  Requires impl="pallas" — the
     # sharded work lists are a kernel-path artifact.
     shards: int = 0
+    # tile→shard partitioning of the sharded schedules: "contiguous" slabs
+    # or occupancy-"balanced" LPT packing (docs/DESIGN.md §11)
+    shard_partition: str = "contiguous"
     mesh_axis: str = "model"
     # Micro-batch padding buckets for submit()/drain(), ascending.  A drain
     # chunk pads to the smallest bucket that fits so the jitted forward
@@ -112,7 +115,8 @@ class CNNServingEngine(RequestFrontEnd):
                 from repro.runtime.sharding import kneaded_shardings
                 self.mesh = make_model_mesh(scfg.shards)
                 self.params = cnn.shard_kneaded_params(
-                    self.params, self.mesh, axis=scfg.mesh_axis)
+                    self.params, self.mesh, axis=scfg.mesh_axis,
+                    partition=scfg.shard_partition)
                 self.params = jax.device_put(
                     self.params, kneaded_shardings(self.params, self.mesh,
                                                    axis=scfg.mesh_axis))

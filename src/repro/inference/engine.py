@@ -55,7 +55,8 @@ _KNEADABLE = ("wq", "wk", "wv", "wo", "wi", "wi_gate", "wi_up", "up",
 
 def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
                  *, kneaded: bool = False, ks: int = 256,
-                 n_block: int = 128, shards: int = 0) -> PyTree:
+                 n_block: int = 128, shards: int = 0,
+                 shard_partition: str = "contiguous") -> PyTree:
     """Convert every kneadable projection leaf to its serving form.
 
     Default (``kneaded=False``): quantize to intN codes — bits=8 ->
@@ -101,11 +102,13 @@ def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
             if leaf.ndim == 2:
                 kw = knead_padded(leaf, bits=bits, ks=ks, n_block=n_block)
                 if shards > 1:
-                    kw = shard_schedule(kw, shards)
+                    kw = shard_schedule(kw, shards,
+                                        partition=shard_partition)
             else:
                 kw = knead_stacked(leaf, bits=bits, ks=ks, n_block=n_block)
                 if shards > 1:
-                    kw = shard_stacked_schedule(kw, shards)
+                    kw = shard_stacked_schedule(kw, shards,
+                                                partition=shard_partition)
             out.append(kw)
             continue
         qt = quantize(leaf, bits=bits, axis=-1, reduce_axes=(-2,))
@@ -162,6 +165,12 @@ class ServingConfig:
     # device).  Requires impl="pallas" — sharded work lists are a kernel-
     # path artifact (docs/DESIGN.md §8).
     shards: int = 0
+    # Tile→shard partitioning of sharded schedules (docs/DESIGN.md §11):
+    #   "contiguous" — each shard takes a contiguous N-tile slab
+    #   "balanced"   — LPT bin-packing on static per-tile occupancy, with
+    #                  a recorded permutation gathered back after the
+    #                  per-device kernels (bit-exact either way)
+    shard_partition: str = "contiguous"
     mesh_axis: str = "model"
     # submit()/drain() batching: micro-batch padding buckets (ascending)
     # and the sliding per-request latency log window.
@@ -233,7 +242,8 @@ class ServingEngine(RequestFrontEnd):
                 params, bits=scfg.quant_bits or 8,
                 min_dim=scfg.knead_min_dim, kneaded=True,
                 ks=scfg.knead_ks, n_block=scfg.knead_n_block,
-                shards=scfg.shards)
+                shards=scfg.shards,
+                shard_partition=scfg.shard_partition)
             if scfg.fault_policy is not None and \
                     scfg.fault_policy.verify_weights:
                 # before device placement: a repaired leaf re-kneads on

@@ -151,6 +151,16 @@ def sac_matmul_pallas_sharded(
     single-device work lists and k-major order), used as the parity oracle
     and for host-side analysis without a mesh.
 
+    ``partition="balanced"`` weights (docs/DESIGN.md §11) come out of the
+    per-device kernels in *packed slot order* — the LPT bin-packing moved
+    whole N-tiles between shards.  The epilogue gathers the [m, n_block]
+    output blocks back into original column order through ``skw.tile_slot``
+    (``out_tile[j] = packed_tile[tile_slot[j]]``).  Each tile's value was
+    produced by the same work items in the same k-major order as on one
+    device, so the gathered output is bit-exact against the unsharded
+    kernel; for a mesh run the gather is the only cross-shard data movement
+    the op introduces.
+
     Output keeps the sharded stored N (slice to ``skw.logical_n`` at the
     call site, as with the unsharded op).
     """
@@ -183,6 +193,10 @@ def sac_matmul_pallas_sharded(
             out_specs=P(None, axis), check_rep=False,
         )(a, skw.planes, skw.signs, skw.scale, skw.counts,
           skw.plane_ids, skw.ktile_ids)
+    if skw.partition == "balanced":
+        tiles = out.reshape(out.shape[0], -1, skw.n_block)
+        out = jnp.take(tiles, skw.tile_slot, axis=1
+                       ).reshape(out.shape[0], -1)
     return out[:m]
 
 

@@ -38,6 +38,12 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="shard kneaded schedules over this many 'model'-"
                          "mesh devices (requires --impl pallas)")
+    ap.add_argument("--shard-partition", default="contiguous",
+                    choices=["contiguous", "balanced"],
+                    help="tile→shard partitioning of sharded schedules: "
+                         "contiguous N-tile slabs, or occupancy-balanced "
+                         "LPT bin-packing with a recorded permutation "
+                         "(bit-exact either way; docs/DESIGN.md §11)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
@@ -106,7 +112,8 @@ def main():
         max_len=args.prompt_len + args.tokens + 8,
         quant_bits=args.quant, temperature=args.temperature,
         impl=args.impl, knead_min_dim=args.knead_min_dim,
-        shards=args.shards, scheduler=args.scheduler,
+        shards=args.shards, shard_partition=args.shard_partition,
+        scheduler=args.scheduler,
         max_inflight=args.max_inflight, fault_policy=fault_policy))
     if args.impl in ("int", "planes", "pallas"):
         precision = f"kneaded int{args.quant or 8}"   # engine default: 8

@@ -175,16 +175,19 @@ def knead_params(params: Dict, bits: int = 8, ks: int = 256,
     return out
 
 
-def shard_kneaded_params(kparams: Dict, mesh, axis: str = "model") -> Dict:
+def shard_kneaded_params(kparams: Dict, mesh, axis: str = "model",
+                         partition: str = "contiguous") -> Dict:
     """Partition every KneadedWeight of a kneaded checkpoint along N.
 
     Each layer's compacted schedule splits into per-device work lists
     (:func:`repro.core.schedule.shard_schedule`); biases stay whole
     (replicated — every device's epilogue adds its output-column slice).
-    Place the result with ``runtime.sharding.kneaded_shardings`` before
-    serving.
+    ``partition="balanced"`` LPT-packs each layer's tiles on static
+    occupancy instead of contiguous slabs (docs/DESIGN.md §11).  Place the
+    result with ``runtime.sharding.kneaded_shardings`` before serving.
     """
-    return {name: {"w": shard_schedule(p["w"], mesh, axis=axis),
+    return {name: {"w": shard_schedule(p["w"], mesh, axis=axis,
+                                       partition=partition),
                    "b": p["b"]}
             for name, p in kparams.items()}
 

@@ -20,6 +20,7 @@ per-arch special cases.  Stacked-layer leading dims (scan) are never sharded.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
 from typing import Any, Optional, Tuple
 
@@ -230,11 +231,17 @@ def tree_param_specs(params_shape: PyTree, mesh: Mesh,
         params_shape, is_leaf=lambda x: isinstance(x, kinds))
     specs = []
     for path, leaf in flat:
+        # tile_slot is the whole-weight tile permutation the epilogue
+        # gather reads — replicated, not shard-split (it indexes across
+        # every shard's output slab)
         if isinstance(leaf, ShardedStackedKneadedWeight):
-            specs.append(jax.tree.map(lambda _: P(None, "model"), leaf))
+            specs.append(dataclasses.replace(
+                jax.tree.map(lambda _: P(None, "model"), leaf),
+                tile_slot=P()))
             continue
         if isinstance(leaf, ShardedKneadedWeight):
-            specs.append(jax.tree.map(lambda _: P("model"), leaf))
+            specs.append(dataclasses.replace(
+                jax.tree.map(lambda _: P("model"), leaf), tile_slot=P()))
             continue
         if isinstance(leaf, KneadedWeight):
             specs.append(jax.tree.map(lambda _: P(), leaf))
@@ -272,10 +279,14 @@ def kneaded_param_specs(tree: PyTree, axis: str = "model") -> PyTree:
                                      ShardedStackedKneadedWeight)
 
     def spec(leaf):
+        # tile_slot replicates: it is the whole-weight tile permutation
+        # the post-kernel gather indexes across all shards' output slabs
         if isinstance(leaf, ShardedStackedKneadedWeight):
-            return jax.tree.map(lambda _: P(None, axis), leaf)
+            return dataclasses.replace(
+                jax.tree.map(lambda _: P(None, axis), leaf), tile_slot=P())
         if isinstance(leaf, ShardedKneadedWeight):
-            return jax.tree.map(lambda _: P(axis), leaf)
+            return dataclasses.replace(
+                jax.tree.map(lambda _: P(axis), leaf), tile_slot=P())
         return jax.tree.map(lambda _: P(), leaf)
 
     return jax.tree.map(

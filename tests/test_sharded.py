@@ -166,17 +166,83 @@ def test_serial_sharded_matmul_bit_exact(shards):
                                       np.asarray(planes))
 
 
-def test_sharded_conv2d_bit_exact():
-    """sac_conv2d with a sharded im2col filter == unsharded pallas conv."""
+@pytest.mark.parametrize("partition", ["contiguous", "balanced"])
+def test_sharded_conv2d_bit_exact(partition):
+    """sac_conv2d with a sharded im2col filter == unsharded pallas conv,
+    under either tile->shard partitioning."""
     x = jax.random.normal(jax.random.PRNGKey(12), (2, 10, 10, 8))
     w = _sparse_w(13, 72, 200)
     kw = knead_padded(w, bits=8)
-    skw = shard_schedule(kw, 2)
+    skw = shard_schedule(kw, 2, partition=partition)
     out = sac_conv2d(x, skw, ksize=3, impl="pallas")
     ref = sac_conv2d(x, kw, ksize=3, impl="pallas")
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
     with pytest.raises(ValueError, match="Pallas kernel only"):
         sac_conv2d(x, skw, ksize=3, impl="planes")
+
+
+# ---------------------------------------- balanced repartitioning pins
+
+def _occ_kw(occ):
+    """All-zero weight whose schedule is forced to a crafted occupancy."""
+    occ = np.asarray(occ, dtype=np.int32)
+    nb, nk, nn = occ.shape
+    kw = knead(jnp.zeros((nk * 256, nn * 128)), bits=nb + 1)
+    return kw.with_occupancy(jnp.asarray(occ))
+
+
+def test_balanced_repartition_pins_roadmap_skew():
+    """REGRESSION PIN: the ROADMAP's skewed ``[14, 7, 0, 0]`` contiguous
+    layer (per-tile counts 4,4,3,3,2,2,2,1 then eight empty tiles)
+    repartitions under ``partition="balanced"`` to max-work
+    ceil(21/4) = 6 — imbalance 2.67 -> ~1.14 (<= the 1.15 acceptance
+    bound)."""
+    counts = [4, 4, 3, 3, 2, 2, 2, 1] + [0] * 8
+    occ = np.zeros((7, 1, 16), np.int32)
+    for j, c in enumerate(counts):
+        occ[:c, 0, j] = 1
+    kw = _occ_kw(occ)
+    cont = shard_schedule(kw, 4)
+    assert list(cont.shard_work) == [14, 7, 0, 0]
+    assert cont.imbalance()["imbalance"] == pytest.approx(14 / 5.25)
+    bal = shard_schedule(kw, 4, partition="balanced")
+    assert max(bal.shard_work) == 6            # == ceil(21 / 4)
+    assert sum(bal.shard_work) == 21           # work conserved
+    assert bal.imbalance()["imbalance"] == pytest.approx(6 / 5.25)
+    assert bal.imbalance()["imbalance"] <= 1.15
+
+
+def test_balanced_padding_tiles_participate():
+    """Padding tiles from an indivisible N-tile count enter the packing as
+    zero-work filler: they never inflate any shard's work, and the
+    balanced max reaches ceil(total/S) where contiguous slabs are stuck
+    carrying the heavy prefix."""
+    counts = [5, 4, 3, 2, 1]                   # 5 tiles -> padded to 6 at S=2
+    occ = np.zeros((7, 1, 5), np.int32)
+    for j, c in enumerate(counts):
+        occ[:c, 0, j] = 1
+    kw = _occ_kw(occ)
+    cont = shard_schedule(kw, 2)
+    assert cont.tiles_per_shard == 3
+    assert list(cont.shard_work) == [12, 3]
+    bal = shard_schedule(kw, 2, partition="balanced")
+    assert sum(bal.shard_work) == 15           # the pad tile added no work
+    assert max(bal.shard_work) == 8            # == ceil(15 / 2)
+    slot = np.asarray(bal.tile_slot)
+    assert sorted(slot.tolist()) == list(range(6))   # pad tile packed too
+
+
+def test_balanced_indivisible_bit_exact():
+    """Balanced packing with a padding tile in play stays bit-exact after
+    the logical-N slice."""
+    w = _sparse_w(20, 512, 640, sparsity=0.6)  # 5 N-tiles
+    a = jax.random.normal(jax.random.PRNGKey(21), (8, 512))
+    kw = knead(w, bits=8)
+    skw = shard_schedule(kw, 2, partition="balanced")
+    assert skw.logical_n == 640
+    out = sac_matmul_pallas_sharded(a, skw, bm=8)[:, :skw.logical_n]
+    ref = sac_matmul_pallas(a, kw, bm=8)[:, :640]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
 # ------------------------------------------- multi-device acceptance test
@@ -204,9 +270,11 @@ _SHARDED = textwrap.dedent("""
     params = cnn.init(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
     shards = jax.device_count()
+    partition = sys.argv[2] if len(sys.argv) > 2 else "contiguous"
     assert shards >= 2, "multi-device run needs forced host devices"
     eng = CNNServingEngine(cfg, params, CNNServingConfig(
-        impl="pallas", jit=False, shards=shards))
+        impl="pallas", jit=False, shards=shards,
+        shard_partition=partition))
     out = np.asarray(eng.logits(x))
     # in-process cross-check against the unsharded kernel (bit-stable
     # across device counts, unlike the dense jnp oracle)
@@ -223,33 +291,43 @@ _SHARDED = textwrap.dedent("""
 """)
 
 
-def _run(code, out_path, extra_env):
+def _run(code, out_path, extra_env, *extra_args):
     env = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH",
                                                        "/usr/bin:/bin")}
     env.update(extra_env)
-    res = subprocess.run([sys.executable, "-c", code, out_path],
+    res = subprocess.run([sys.executable, "-c", code, out_path,
+                          *extra_args],
                          capture_output=True, text=True, env=env,
                          cwd=".", timeout=600)
     assert res.returncode == 0, res.stderr[-2000:]
     return json.loads(res.stdout.strip().splitlines()[-1])
 
 
-def test_sharded_alexnet_bit_exact_vs_single_device_oracle(tmp_path):
+@pytest.fixture(scope="module")
+def cnn_oracle(tmp_path_factory):
+    """The clean single-device planes-oracle logits, computed ONCE for the
+    whole partition parametrization (the oracle command is identical)."""
+    path = tmp_path_factory.mktemp("cnn_oracle") / "oracle.npy"
+    meta = _run(_ORACLE, str(path), {"JAX_PLATFORMS": "cpu"})
+    assert meta["devices"] == 1
+    return np.load(path)
+
+
+@pytest.mark.parametrize("partition", ["contiguous", "balanced"])
+def test_sharded_alexnet_bit_exact_vs_single_device_oracle(
+        tmp_path, cnn_oracle, partition):
     """ACCEPTANCE: a full AlexNet forward, every layer's schedule sharded
-    over >=2 forced host devices and launched under shard_map, is bit-exact
-    against the planes oracle computed on a clean single device."""
+    over >=2 forced host devices and launched under shard_map — under
+    either tile->shard partitioning — is bit-exact against the planes
+    oracle computed on a clean single device."""
     n_force = int(os.environ.get("REPRO_SHARD_TEST_DEVICES", "4"))
     sharded_meta = _run(
         _SHARDED, str(tmp_path / "sharded.npy"),
         {"XLA_FLAGS": f"--xla_force_host_platform_device_count={n_force}",
-         "JAX_PLATFORMS": "cpu"})
-    oracle_meta = _run(_ORACLE, str(tmp_path / "oracle.npy"),
-                       {"JAX_PLATFORMS": "cpu"})
+         "JAX_PLATFORMS": "cpu"}, partition)
     assert sharded_meta["devices"] == n_force
-    assert oracle_meta["devices"] == 1
     out = np.load(tmp_path / "sharded.npy")
-    ref = np.load(tmp_path / "oracle.npy")
-    np.testing.assert_array_equal(out, ref)
+    np.testing.assert_array_equal(out, cnn_oracle)
     assert sharded_meta["total_work"] > 0
     assert sharded_meta["max_imbalance"] >= 1.0
 
