@@ -185,7 +185,7 @@ def build_schedule(occupancy_map: jax.Array) -> KneadedSchedule:
     )
 
 
-def replay_schedule(a, kw) -> jax.Array:
+def replay_schedule(a, kw, act_presence=None) -> jax.Array:
     """Executable spec of the compacted kernel: walk the schedule on the host.
 
     Replays, in numpy, exactly the work items the kernel's grid executes —
@@ -198,9 +198,20 @@ def replay_schedule(a, kw) -> jax.Array:
     schedule arrays; the arithmetic itself is the same jnp ops as the planes
     oracle, so accumulation rounding is identical operation-for-operation.
 
+    ``act_presence`` ({0,1} [nk], e.g. from
+    :func:`repro.core.activation_occupancy.ktile_presence`) replays the
+    activation-*intersected* order of the two-sided skip (docs/DESIGN.md
+    §12): real items whose K-tile presence bit is 0 are dropped, survivors
+    keep their k-major order — the oracle the masked Pallas walk is pinned
+    bit-exact against, and (when the presence honestly reflects ``a``'s
+    zeros) bit-exact against the unskipped replay too, since every dropped
+    dot is exactly 0.
+
     Args:
       a:  [M, K] activations (K == kw.k, stored/padded dim).
       kw: a :class:`repro.core.kneading.KneadedWeight` with a schedule.
+      act_presence: optional {0,1} [kw.k // kw.ks] activation K-tile
+        presence bits; None replays the static weight-only walk.
     """
     from repro.core import bitplanes
 
@@ -211,6 +222,7 @@ def replay_schedule(a, kw) -> jax.Array:
     counts = np.asarray(sched.counts)
     plane_ids = np.asarray(sched.plane_ids)
     ktile_ids = np.asarray(sched.ktile_ids)
+    presence = None if act_presence is None else np.asarray(act_presence)
     ks, nb = kw.ks, kw.n_block
     m = a32.shape[0]
     weights = (2.0 ** jnp.arange(kw.bits - 1)).reshape(-1, 1, 1)
@@ -220,6 +232,8 @@ def replay_schedule(a, kw) -> jax.Array:
         seg = [jnp.zeros((m, nb), jnp.float32) for _ in range(kw.bits - 1)]
         for w in range(int(counts[j])):                # real items only
             b, t = int(plane_ids[j, w]), int(ktile_ids[j, w])
+            if presence is not None and not presence[t]:
+                continue                               # activation-side skip
             ksl = slice(t * ks, (t + 1) * ks)
             plane = (mag[b, ksl, nsl].astype(jnp.int8)
                      * sign[ksl, nsl]).astype(jnp.float32)

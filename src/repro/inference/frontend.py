@@ -195,6 +195,12 @@ class RequestFrontEnd:
         self._fault_counters: collections.Counter = collections.Counter()
         self._fault_events: Deque[Dict[str, Any]] = collections.deque(
             maxlen=stats_window)
+        # Activation-skip accounting baseline (docs/DESIGN.md §12): the
+        # counters are process-wide (they accumulate from inside jitted
+        # decode steps via debug callback), so each engine snapshots at
+        # construction and latency_stats() reports its own delta.
+        from repro.core import activation_occupancy
+        self._skip_stats_base = activation_occupancy.skip_stats()
 
     def _fault_event(self, kind: str, **detail: Any) -> None:
         self._fault_counters[kind] += 1
@@ -270,7 +276,8 @@ class RequestFrontEnd:
         if lat.size == 0:
             return {"requests": 0,
                     **{k: int(v) for k, v in self._fault_counters.items()
-                       if v}}
+                       if v},
+                    **self._skip_stats_delta()}
         out = {
             "requests": int(lat.size),
             "mean_ms": float(lat.mean()),
@@ -291,5 +298,25 @@ class RequestFrontEnd:
         # resilience counters (docs/DESIGN.md §10): zero-valued keys are
         # omitted — a fault-free engine's stats look exactly as before
         out.update({k: int(v) for k, v in self._fault_counters.items() if v})
+        # activation-skip accounting (docs/DESIGN.md §12): present only
+        # when masked launches actually ran under this engine
+        out.update(self._skip_stats_delta())
         return out
+
+    def _skip_stats_delta(self) -> Dict[str, float]:
+        """This engine's activation-skip traffic since construction:
+        ``executed_tile_dots``, ``weight_tile_dots`` and the derived
+        ``act_skip_frac`` — empty when no masked launch ran (skip off),
+        so stats dicts are unchanged for skip-off engines."""
+        from repro.core import activation_occupancy
+        cur = activation_occupancy.skip_stats()
+        weight = (cur["weight_tile_dots"]
+                  - self._skip_stats_base["weight_tile_dots"])
+        if weight <= 0:
+            return {}
+        executed = (cur["executed_tile_dots"]
+                    - self._skip_stats_base["executed_tile_dots"])
+        return {"executed_tile_dots": int(executed),
+                "weight_tile_dots": int(weight),
+                "act_skip_frac": float(1.0 - executed / weight)}
 

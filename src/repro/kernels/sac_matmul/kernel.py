@@ -22,12 +22,17 @@ Hardware mapping of the paper's PE (Fig 5) onto the TPU memory hierarchy:
 
 Grid: ``(M/bm, N/bn, num_work)`` with the *work list* innermost (revisiting =
 output-stationary).  ``num_work`` is the max per-N-tile work count; tile j
-executes exactly ``counts[j]`` MXU passes (its real items) and idles through
+executes exactly its surviving mask entries as MXU passes and idles through
 the rest — padded schedule entries repeat the tile's last real item, so their
-index maps request already-resident blocks and Pallas elides the DMA.  Total
-executed MXU passes per M-step therefore equal the occupancy *nonzero count*,
-not the dense ``(B-1) * K/bk * N/bn`` — the paper's "skip the slack" realized
-at the front-end scheduler rather than in the kernel body.
+index maps request already-resident blocks and Pallas elides the DMA.  The
+guard consults a scalar-prefetched *survival mask* rather than the raw work
+counts: the static weight-only mask (``w < counts[j]`` expanded per slot)
+reproduces the original walk bit-for-bit, while the runtime
+activation-intersected mask (docs/DESIGN.md §12) additionally drops real
+items whose activation K-slice is all zero — the two-sided skip.  Total
+executed MXU passes per M-step therefore equal the *intersected* occupancy
+nonzero count, not the dense ``(B-1) * K/bk * N/bn`` — the paper's "skip the
+slack" realized at the front-end scheduler rather than in the kernel body.
 
 Work items are k-major (K-tile ascending, plane within), so consecutive items
 share the activation and sign blocks, and per-plane segments accumulate their
@@ -92,7 +97,7 @@ def _unpack_words(words: jax.Array, bk: int) -> jax.Array:
 
 
 def sac_matmul_kernel(
-    counts_ref,     # scalar prefetch: [N/bn] int32 work counts
+    mask_ref,       # scalar prefetch: [N/bn, num_work] int32 survival mask
     plane_ids_ref,  # scalar prefetch: [N/bn, num_work] int32
     ktile_ids_ref,  # scalar prefetch: [N/bn, num_work] int32
     a_ref,          # [bm, bk] activations (block of the scheduled K-tile)
@@ -115,7 +120,7 @@ def sac_matmul_kernel(
         seg_ref[...] = jnp.zeros_like(seg_ref)
         last_kt_ref[0] = -1                # invalidate the sign cache
 
-    @pl.when(w < counts_ref[j])            # real work item (else idle pad)
+    @pl.when(mask_ref[j, w] != 0)          # surviving work item (else idle)
     def _mxu_pass():
         b = plane_ids_ref[j, w]            # segment register select
         kt = ktile_ids_ref[j, w]
@@ -160,8 +165,20 @@ def sac_matmul_pallas_call(
     bn: int = 128,
     bk: int = 256,
     interpret: bool = True,
+    mask: jax.Array | None = None,
 ) -> jax.Array:
-    """Raw pallas_call wrapper (shapes must already be tile-aligned)."""
+    """Raw pallas_call wrapper (shapes must already be tile-aligned).
+
+    ``mask`` is the per-slot survival mask, int32 [N/bn, num_work] — the
+    *runtime* half of the two-sided skip (docs/DESIGN.md §12).  ``None``
+    (the static weight-only walk) expands the schedule counts to the mask
+    the pre-skip guard ``w < counts[j]`` tested, so the masked kernel is
+    bit-for-bit the unmasked one.  An activation-intersected mask may
+    additionally drop real items whose activation K-slice is all zero;
+    surviving items keep their k-major slot positions, so per-segment f32
+    accumulation order — hence bit-exactness vs the planes oracle — is
+    preserved.
+    """
     m, k = a.shape
     n = planes.shape[-1]
     assert bm % 8 == 0, f"bm={bm} must be a multiple of the 8-row sublane floor"
@@ -170,6 +187,11 @@ def sac_matmul_pallas_call(
         schedule.nk, schedule.n_tiles, k // bk, n // bn)
     num_work = schedule.num_work
     grid = (m // bm, n // bn, num_work)
+    if mask is None:
+        from repro.core.activation_occupancy import weight_only_mask
+        mask = weight_only_mask(schedule.counts, num_work)
+    assert mask.shape == schedule.plane_ids.shape, (
+        mask.shape, schedule.plane_ids.shape)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -179,16 +201,16 @@ def sac_matmul_pallas_call(
         # lists, not from the grid coordinates.
         in_specs=[
             pl.BlockSpec((bm, bk),
-                         lambda i, j, w, cnt, pid, kid: (i, kid[j, w])),
+                         lambda i, j, w, msk, pid, kid: (i, kid[j, w])),
             pl.BlockSpec((1, bk // WORD, bn),
-                         lambda i, j, w, cnt, pid, kid: (pid[j, w],
+                         lambda i, j, w, msk, pid, kid: (pid[j, w],
                                                          kid[j, w], j)),
             pl.BlockSpec((bk // WORD, bn),
-                         lambda i, j, w, cnt, pid, kid: (kid[j, w], j)),
-            pl.BlockSpec((1, bn), lambda i, j, w, cnt, pid, kid: (0, j)),
+                         lambda i, j, w, msk, pid, kid: (kid[j, w], j)),
+            pl.BlockSpec((1, bn), lambda i, j, w, msk, pid, kid: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn),
-                               lambda i, j, w, cnt, pid, kid: (i, j)),
+                               lambda i, j, w, msk, pid, kid: (i, j)),
         scratch_shapes=[pltpu.VMEM((bits - 1, bm, bn), jnp.float32),
                         pltpu.VMEM((bk, bn), jnp.float32),
                         pltpu.SMEM((1,), jnp.int32)],
@@ -200,5 +222,5 @@ def sac_matmul_pallas_call(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
-    )(schedule.counts, schedule.plane_ids, schedule.ktile_ids,
+    )(mask.astype(jnp.int32), schedule.plane_ids, schedule.ktile_ids,
       a, planes, signs, scale)

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core import activation_occupancy
 from repro.core.kneading import KneadedWeight, ShardedKneadedWeight
 from repro.core.schedule import KneadedSchedule
 from repro.kernels.sac_matmul.kernel import sac_matmul_pallas_call
@@ -51,12 +52,12 @@ def _on_tpu() -> bool:
 
 @functools.partial(
     jax.jit, static_argnames=("bits", "ks", "n_block", "bm", "interpret"))
-def _run(a, planes, signs, scale, schedule, *, bits, ks, n_block, bm,
+def _run(a, planes, signs, scale, schedule, mask, *, bits, ks, n_block, bm,
          interpret):
     return sac_matmul_pallas_call(
         a, planes, signs, scale, schedule,
         bits=bits, bm=bm, bn=n_block, bk=ks,
-        interpret=interpret,
+        interpret=interpret, mask=mask,
     )
 
 
@@ -66,6 +67,7 @@ def sac_matmul_pallas(
     *,
     bm: int = 256,
     interpret: bool | None = None,
+    skip_activations: bool = False,
 ) -> jax.Array:
     """[M, K] @ kneaded [K, N] -> [M, N] f32 via the Pallas SAC kernel.
 
@@ -75,12 +77,29 @@ def sac_matmul_pallas(
     need no padding logic of their own.  N alignment is guaranteed by the
     kneaded format (n_block | N); the output keeps the stored N (slice to
     ``kw.logical_n`` at the call site if needed).
+
+    ``skip_activations=True`` arms the two-sided skip (docs/DESIGN.md §12):
+    per-K-tile presence bits computed from the (padded) activations are
+    intersected into the schedule walk via the kernel's survival mask, so
+    real work items whose activation K-slice is all zero never execute an
+    MXU pass.  Bit-exact against the unskipped walk — a dropped item would
+    have contributed exactly 0.0 to its f32 segment, and surviving items
+    keep their k-major order.  ``core.sac.sac_matmul`` gates this to the
+    decode-GEMV regime; this raw entry applies it at any M when asked.
     """
     if interpret is None:
         interpret = not _on_tpu()
     a, m, bm_eff = _pad_activations(a, kw, bm)
+    if skip_activations:
+        presence = activation_occupancy.ktile_presence(a, kw.ks)
+        mask = activation_occupancy.work_mask(
+            kw.schedule.counts, kw.schedule.ktile_ids, presence)
+        activation_occupancy.record_skip(mask, kw.schedule.counts)
+    else:
+        mask = activation_occupancy.weight_only_mask(
+            kw.schedule.counts, kw.schedule.num_work)
     out = _run(
-        a, kw.planes, kw.signs, kw.scale, kw.schedule,
+        a, kw.planes, kw.signs, kw.scale, kw.schedule, mask,
         bits=kw.bits, ks=kw.ks, n_block=kw.n_block, bm=bm_eff,
         interpret=interpret,
     )
@@ -134,6 +153,7 @@ def sac_matmul_pallas_sharded(
     *,
     bm: int = 256,
     interpret: bool | None = None,
+    skip_activations: bool = False,
 ) -> jax.Array:
     """[M, K] @ N-sharded kneaded [K, N] -> [M, N] f32, one kernel per shard.
 
@@ -163,12 +183,29 @@ def sac_matmul_pallas_sharded(
 
     Output keeps the sharded stored N (slice to ``skw.logical_n`` at the
     call site, as with the unsharded op).
+
+    ``skip_activations=True``: the activation K-tile presence is computed
+    *once* from the replicated (padded) activations — sharding is along N,
+    so every shard sees the same presence bits — and intersected with each
+    shard's own work list into a per-shard survival mask [S, T, num_work],
+    sliced per device alongside the schedule arrays.  The balanced
+    partition's ``tile_slot`` gather epilogue is untouched: masking changes
+    which items a tile executes, never which shard/slot the tile lives in.
     """
     if interpret is None:
         interpret = not _on_tpu()
     a, m, bm_eff = _pad_activations(a, skw, bm)
+    # per-slot survival masks, one row of shards: [S, T, num_work]
+    base = jax.lax.broadcasted_iota(
+        jnp.int32, skw.ktile_ids.shape, 2) < skw.counts[:, :, None]
+    if skip_activations:
+        presence = activation_occupancy.ktile_presence(a, skw.ks)
+        mask = (base & (presence[skw.ktile_ids] != 0)).astype(jnp.int32)
+        activation_occupancy.record_skip(mask, skw.counts)
+    else:
+        mask = base.astype(jnp.int32)
 
-    def one_shard(a_, planes, signs, scale, counts, pids, kids):
+    def one_shard(a_, planes, signs, scale, counts, pids, kids, mask_):
         # inside shard_map every arg holds this device's slab with the
         # leading shard axis collapsed to extent 1
         sched = KneadedSchedule(
@@ -178,21 +215,22 @@ def sac_matmul_pallas_sharded(
         return sac_matmul_pallas_call(
             a_, planes[0], signs[0], scale[0], sched,
             bits=skw.bits, bm=bm_eff, bn=skw.n_block, bk=skw.ks,
-            interpret=interpret)
+            interpret=interpret, mask=mask_[0])
 
     if mesh is None:
         outs = [one_shard(a, skw.planes[s:s + 1], skw.signs[s:s + 1],
                           skw.scale[s:s + 1], skw.counts[s:s + 1],
-                          skw.plane_ids[s:s + 1], skw.ktile_ids[s:s + 1])
+                          skw.plane_ids[s:s + 1], skw.ktile_ids[s:s + 1],
+                          mask[s:s + 1])
                 for s in range(skw.num_shards)]
         out = jnp.concatenate(outs, axis=1)
     else:
-        sharded = (P(axis),) * 6
+        sharded = (P(axis),) * 7
         out = shard_map(
             one_shard, mesh=mesh, in_specs=(P(),) + sharded,
             out_specs=P(None, axis), check_rep=False,
         )(a, skw.planes, skw.signs, skw.scale, skw.counts,
-          skw.plane_ids, skw.ktile_ids)
+          skw.plane_ids, skw.ktile_ids, mask)
     if skw.partition == "balanced":
         tiles = out.reshape(out.shape[0], -1, skw.n_block)
         out = jnp.take(tiles, skw.tile_slot, axis=1

@@ -107,10 +107,13 @@ def _qkv(p, x, kv_src, cfg: ModelConfig, dtype):
     b = x.shape[0]
     hd, nh, nkv = cfg.hd, cfg.num_heads, cfg.num_kv_heads
     g = nh // nkv
-    impl = cfg.impl
-    q = matmul_any(x, p["wq"], dtype, impl=impl).reshape(b, -1, nkv, g, hd)
-    k = matmul_any(kv_src, p["wk"], dtype, impl=impl).reshape(b, -1, nkv, hd)
-    v = matmul_any(kv_src, p["wv"], dtype, impl=impl).reshape(b, -1, nkv, hd)
+    impl, skip = cfg.impl, cfg.activation_skip
+    q = matmul_any(x, p["wq"], dtype, impl=impl,
+                   skip_activations=skip).reshape(b, -1, nkv, g, hd)
+    k = matmul_any(kv_src, p["wk"], dtype, impl=impl,
+                   skip_activations=skip).reshape(b, -1, nkv, hd)
+    v = matmul_any(kv_src, p["wv"], dtype, impl=impl,
+                   skip_activations=skip).reshape(b, -1, nkv, hd)
     if cfg.qk_norm:
         q = layers.rms_head_norm(q, p["qnorm"])
         k = layers.rms_head_norm(k, p["knorm"])
@@ -176,7 +179,7 @@ def attn_apply(
         out = layers.decode_attention(q, k_read, v_read, pos,
                                       window=cfg.window)
         y = matmul_any(out.reshape(out.shape[0], 1, -1), p["wo"], dtype,
-                       impl=cfg.impl)
+                       impl=cfg.impl, skip_activations=cfg.activation_skip)
         if quant_kv:
             return x + y, (k_cache, v_cache, k_sc, v_sc)
         return x + y, (k_cache, v_cache)
@@ -206,7 +209,8 @@ def attn_apply(
                             and _attn_shard_mode(cfg) is None
                             and pspec.current_mesh() is not None)
     b, s = out.shape[:2]
-    y = matmul_any(out.reshape(b, s, -1), p["wo"], dtype, impl=cfg.impl)
+    y = matmul_any(out.reshape(b, s, -1), p["wo"], dtype, impl=cfg.impl,
+                   skip_activations=cfg.activation_skip)
     y = res_constrain(x + y, cfg)
     if return_kv:
         return y, (k, v)
@@ -238,20 +242,25 @@ def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
     return p
 
 
-def _ffn(h, p, activation: str, dtype, impl: str = "int") -> jax.Array:
+def _ffn(h, p, activation: str, dtype, impl: str = "int",
+         skip: bool = False) -> jax.Array:
     if activation == "swiglu":
-        u = (jax.nn.silu(matmul_any(h, p["wi_gate"], dtype, impl=impl))
-             * matmul_any(h, p["wi_up"], dtype, impl=impl))
+        u = (jax.nn.silu(matmul_any(h, p["wi_gate"], dtype, impl=impl,
+                                    skip_activations=skip))
+             * matmul_any(h, p["wi_up"], dtype, impl=impl,
+                          skip_activations=skip))
     else:
-        u = layers.activate(matmul_any(h, p["wi"], dtype, impl=impl),
+        u = layers.activate(matmul_any(h, p["wi"], dtype, impl=impl,
+                                       skip_activations=skip),
                             activation)
-    return matmul_any(u, p["wo"], dtype, impl=impl)
+    return matmul_any(u, p["wo"], dtype, impl=impl, skip_activations=skip)
 
 
 def mlp_apply(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     dtype = jnp.dtype(cfg.dtype)
     h = sp_gather(layers.apply_norm(p["ln"], x, cfg.norm), cfg)
-    y = _ffn(h, p, cfg.activation, dtype, impl=cfg.impl)
+    y = _ffn(h, p, cfg.activation, dtype, impl=cfg.impl,
+             skip=cfg.activation_skip)
     return res_constrain(x + y, cfg)
 
 
@@ -416,6 +425,6 @@ def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     if cfg.dense_residual:
         dense_h = layers.apply_norm(p["dense"]["ln"], x, cfg.norm)
         y = y + _ffn(dense_h, p["dense"], cfg.activation, dtype,
-                     impl=cfg.impl)
+                     impl=cfg.impl, skip=cfg.activation_skip)
     out = res_constrain(x + y.astype(x.dtype), cfg)
     return out, aux

@@ -330,7 +330,8 @@ class LanguageModel:
         h, _, _ = self._hidden(params, batch)
         return layers.matmul_any(h, self._unembed_w(params),
                                  jnp.dtype(self.cfg.dtype),
-                                 impl=self.cfg.impl)
+                                 impl=self.cfg.impl,
+                                 skip_activations=self.cfg.activation_skip)
 
     def loss(self, params, batch, loss_chunk: int = 0) -> jax.Array:
         """Cross entropy + MoE aux.  The vocab matmul runs in bf16 with f32
@@ -376,7 +377,8 @@ class LanguageModel:
         last = h[:, -1]
         logits = layers.matmul_any(last, self._unembed_w(params),
                                    jnp.dtype(self.cfg.dtype),
-                                   impl=self.cfg.impl)
+                                   impl=self.cfg.impl,
+                                   skip_activations=self.cfg.activation_skip)
         # pad KV caches to max length happens in inference.engine; here the
         # cache covers the prefilled prefix exactly.
         return logits, cache
@@ -602,5 +604,6 @@ class LanguageModel:
         h = layers.apply_norm(params["final_norm"], h, cfg.norm)
         logits = layers.matmul_any(h[:, 0], self._unembed_w(params),
                                    jnp.dtype(cfg.dtype),
-                                   impl=cfg.impl)
+                                   impl=cfg.impl,
+                                   skip_activations=cfg.activation_skip)
         return logits, cache

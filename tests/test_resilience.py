@@ -300,6 +300,62 @@ def test_demotion_ladder_ends(smol):
     assert eng.scfg.impl == "float"
 
 
+# ------------------------------------- activation skip under faults
+
+
+def test_decode_fault_recovery_with_activation_skip(smol):
+    """Chaos x two-sided skip (docs/DESIGN.md §12): a kernel exception
+    mid-decode with ``activation_skip=True`` recovers via the full-prompt
+    replay and the survivors stay bit-identical to BOTH a fault-free
+    skip-on run and a fault-free skip-off run — fault recovery and the
+    activation-occupancy mask compose without moving a bit."""
+    cfg, _ = smol
+    want = {}
+    for skip in (False, True):
+        ref = _engine(smol, impl="pallas", activation_skip=skip)
+        _submit_set(ref, cfg)
+        want[skip] = ref.drain()
+    for rid in want[False]:
+        assert np.array_equal(np.asarray(want[True][rid]),
+                              np.asarray(want[False][rid]))
+    eng = _engine(smol, impl="pallas", activation_skip=True,
+                  fault_policy=_policy(
+                      injector=EngineFaultInjector(fail_decode_steps=(2,))))
+    handles = _submit_set(eng, cfg)
+    got = eng.drain()
+    assert sorted(got) == sorted(want[True])
+    for rid in want[True]:
+        assert np.array_equal(np.asarray(got[rid]),
+                              np.asarray(want[True][rid]))
+    stats = eng.latency_stats()
+    assert stats["recoveries"] == 1 and stats["retries"] >= 1
+    assert all(h.state == "done" for h in handles)
+
+
+def test_demotion_preserves_activation_skip(smol):
+    """The degradation ladder replaces only ``impl``: after pallas ->
+    planes demotion the engine still carries ``activation_skip=True``
+    (planes replays the intersected order in its oracle), and the
+    completed generations match the fault-free skip-off pallas reference
+    bit-for-bit."""
+    cfg, _ = smol
+    ref = _engine(smol, impl="pallas")
+    _submit_set(ref, cfg)
+    want = ref.drain()
+    eng = _engine(smol, impl="pallas", activation_skip=True,
+                  fault_policy=_policy(
+                      max_retries=3, demote_after=2,
+                      injector=EngineFaultInjector(fail_decode_steps=(1, 2))))
+    _submit_set(eng, cfg)
+    got = eng.drain()
+    assert eng.scfg.impl == "planes" and eng.cfg.impl == "planes"
+    assert eng.scfg.activation_skip and eng.cfg.activation_skip
+    assert sorted(got) == sorted(want)
+    for rid in want:
+        assert np.array_equal(np.asarray(got[rid]), np.asarray(want[rid]))
+    assert eng.latency_stats()["degradations"] == 1
+
+
 # ------------------------------------------- kneaded-weight integrity
 
 

@@ -18,8 +18,9 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.core import activation_occupancy as actocc
 from repro.core import knead, sac_matmul
-from repro.core.bitplanes import pack_presence, unpack_presence
+from repro.core.bitplanes import pack_presence, popcount, unpack_presence
 from repro.core.kneading import knead_padded
 from repro.core.schedule import build_schedule, replay_schedule, shard_schedule
 from repro.kernels.sac_matmul.ops import (sac_matmul_pallas,
@@ -280,6 +281,201 @@ def test_balanced_sharded_bit_exact_random(seed, shards):
     out = sac_matmul_pallas_sharded(a, skw, bm=8)[:, :kw.n]
     ref = sac_matmul_pallas(a, kw, bm=8)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ------------------- activation-side skip (two-sided; docs/DESIGN.md §12)
+#
+# The runtime half of the skip intersects per-K-tile activation presence
+# into the static weight-side schedule.  The property wall: intersected
+# work ⊆ weight-only work (with the packed-presence popcount agreeing),
+# dropped items contribute exactly 0 to the replay oracle (work
+# conservation), the activation extremes survive, and the masked Pallas
+# walk stays bit-exact against planes AND the unskipped walk across random
+# sparsities.
+
+def _gappy_activation(seed, m, k, ks, dead_frac):
+    """[m, k] activations with whole K-tiles zeroed (a dead-channel ReLU
+    trace shape — elementwise sparsity alone never empties a 256-wide
+    tile, so tile-granular skip needs structured gaps)."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    nk = k // ks
+    dead = rng.random(nk) < dead_frac
+    for t in np.nonzero(dead)[0]:
+        a[:, t * ks:(t + 1) * ks] = 0.0
+    return jnp.asarray(a)
+
+
+def _check_intersection_invariants(kw, a):
+    """Subset + packed-popcount agreement for one (weight, activation)."""
+    pres = actocc.ktile_presence(a, kw.ks)
+    sched = kw.schedule
+    mask = np.asarray(actocc.work_mask(sched.counts, sched.ktile_ids, pres))
+    base = np.asarray(actocc.weight_only_mask(sched.counts, sched.num_work))
+    # intersected work ⊆ weight-only work, slot by slot
+    assert ((mask == 0) | (base == 1)).all()
+    assert mask.sum() <= base.sum() == sched.total_work
+    # the packed-word view of the same intersection counts the same work
+    inter = actocc.intersect_packed_presence(kw.occupancy, pres)
+    assert int(np.asarray(popcount(inter)).sum()) == int(mask.sum())
+    # per N-tile too, not just in aggregate
+    per_tile = np.asarray(popcount(inter)).sum(axis=(0, 1))
+    np.testing.assert_array_equal(per_tile, mask.sum(axis=1))
+    return pres, mask
+
+
+@given(seed=st.integers(0, 200),
+       sparsity=st.sampled_from([0.0, 0.7]),
+       dead_frac=st.sampled_from([0.0, 0.5, 1.0]))
+def test_act_intersection_subset(seed, sparsity, dead_frac):
+    """PROPERTY: for random weights and gappy activations, the intersected
+    work list is a subset of the weight-only one and its size equals the
+    popcount of the AND-ed packed presence words."""
+    kw = knead(_sparse_w(seed, 512, 256, sparsity), bits=8)
+    a = _gappy_activation(seed + 1, 2, 512, 256, dead_frac)
+    _check_intersection_invariants(kw, a)
+
+
+def test_act_intersection_subset_smoke():
+    """Non-hypothesis fallback of the subset property: fixed cases covering
+    no gaps, half gaps, and all-dead activations."""
+    for seed, dead in ((0, 0.0), (1, 0.5), (2, 1.0)):
+        kw = knead(_sparse_w(seed, 1024, 256, 0.6), bits=8, ks=256)
+        a = _gappy_activation(seed + 9, 2, 1024, 256, dead)
+        _check_intersection_invariants(kw, a)
+
+
+@given(seed=st.integers(0, 100),
+       sparsity=st.sampled_from([0.0, 0.8]),
+       dead_frac=st.sampled_from([0.25, 0.5, 0.75]))
+def test_act_skip_work_conservation(seed, sparsity, dead_frac):
+    """PROPERTY (work conservation): the items the intersection drops
+    contribute exactly 0 — the replay oracle over the intersected order is
+    bit-identical to the full weight-only replay."""
+    kw = knead(_sparse_w(seed, 1024, 128, sparsity), bits=8)
+    a = _gappy_activation(seed + 3, 2, 1024, 256, dead_frac)
+    pres, mask = _check_intersection_invariants(kw, a)
+    full = replay_schedule(a, kw)
+    skipped = replay_schedule(a, kw, act_presence=pres)
+    np.testing.assert_array_equal(np.asarray(skipped), np.asarray(full))
+
+
+def test_act_skip_work_conservation_smoke():
+    """Non-hypothesis fallback of the conservation property: one case where
+    the intersection provably drops work, replays bit-identical."""
+    kw = knead(_sparse_w(11, 1024, 128, 0.5), bits=8)
+    a = _gappy_activation(17, 1, 1024, 256, 0.5)
+    pres, mask = _check_intersection_invariants(kw, a)
+    assert mask.sum() < kw.schedule.total_work     # really dropped items
+    full = replay_schedule(a, kw)
+    skipped = replay_schedule(a, kw, act_presence=pres)
+    np.testing.assert_array_equal(np.asarray(skipped), np.asarray(full))
+
+
+@pytest.mark.parametrize("case", ["all_zero", "all_dense", "single_hot"])
+def test_act_skip_activation_extremes(case):
+    """Activation extremes: an all-zero activation drops EVERY item (output
+    exactly zero), a fully-dense one drops none (mask == weight-only mask),
+    and a single-hot one keeps exactly the one tile's items — all bit-exact
+    against the unskipped kernel and the planes oracle."""
+    kw = knead(_sparse_w(31, 1024, 256, 0.5), bits=8)
+    sched = kw.schedule
+    rng = np.random.default_rng(32)
+    a = np.zeros((2, 1024), np.float32)
+    if case == "all_dense":
+        a = rng.normal(size=(2, 1024)).astype(np.float32)
+    elif case == "single_hot":
+        a[:, 256:512] = rng.normal(size=(2, 256)).astype(np.float32)
+    a = jnp.asarray(a)
+    pres = actocc.ktile_presence(a, kw.ks)
+    mask = np.asarray(actocc.work_mask(sched.counts, sched.ktile_ids, pres))
+    counts = np.asarray(sched.counts)
+    kids = np.asarray(sched.ktile_ids)
+    if case == "all_zero":
+        assert mask.sum() == 0
+    elif case == "all_dense":
+        np.testing.assert_array_equal(
+            mask, np.asarray(actocc.weight_only_mask(sched.counts,
+                                                     sched.num_work)))
+    else:
+        expect = sum(int((kids[j, :counts[j]] == 1).sum())
+                     for j in range(sched.n_tiles))
+        assert mask.sum() == expect > 0
+    on = sac_matmul_pallas(a, kw, bm=8, skip_activations=True)
+    off = sac_matmul_pallas(a, kw, bm=8)
+    ref = sac_matmul(a, kw, impl="planes")
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+    np.testing.assert_array_equal(np.asarray(on[:, :kw.logical_n]),
+                                  np.asarray(ref))
+    if case == "all_zero":
+        np.testing.assert_array_equal(np.asarray(on),
+                                      np.zeros_like(np.asarray(on)))
+
+
+@given(seed=st.integers(0, 100),
+       sparsity=st.sampled_from([0.0, 0.7, 0.95]),
+       dead_frac=st.sampled_from([0.0, 0.5]),
+       m=st.sampled_from([1, 2, 8]))
+def test_act_skip_parity_bit_exact(seed, sparsity, dead_frac, m):
+    """PROPERTY: masked pallas == unmasked pallas == planes, bitwise, across
+    random weight sparsities, activation gap fractions, and GEMV row
+    counts."""
+    kw = knead(_sparse_w(seed, 512, 128, sparsity), bits=8)
+    a = _gappy_activation(seed + 5, m, 512, 256, dead_frac)
+    on = sac_matmul(a, kw, impl="pallas", skip_activations=True)
+    off = sac_matmul(a, kw, impl="pallas")
+    ref = sac_matmul(a, kw, impl="planes")
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(ref))
+
+
+def test_act_skip_parity_smoke():
+    """Non-hypothesis fallback of the skip-parity property, with the skip
+    accounting checked: fewer executed than scheduled tile-dots, same
+    bits."""
+    kw = knead(_sparse_w(41, 1024, 128, 0.5), bits=8)
+    a = _gappy_activation(43, 2, 1024, 256, 0.5)
+    actocc.reset_skip_stats()
+    on = sac_matmul(a, kw, impl="pallas", skip_activations=True)
+    jax.block_until_ready(on)
+    stats = actocc.skip_stats()
+    assert stats["weight_tile_dots"] == kw.schedule.total_work
+    assert stats["executed_tile_dots"] < stats["weight_tile_dots"]
+    assert 0.0 < stats["act_skip_frac"] <= 1.0
+    off = sac_matmul(a, kw, impl="pallas")
+    ref = sac_matmul(a, kw, impl="planes")
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(ref))
+
+
+def test_act_skip_gemv_gate():
+    """The sac_matmul switch is decode-GEMV-only: a prefill-shaped call
+    (M > 8) must fall back to the static weight-only walk and record no
+    skip traffic."""
+    kw = knead(_sparse_w(51, 512, 128, 0.5), bits=8)
+    a = _gappy_activation(53, 24, 512, 256, 0.5)
+    actocc.reset_skip_stats()
+    on = sac_matmul(a, kw, impl="pallas", skip_activations=True)
+    jax.block_until_ready(on)
+    assert actocc.skip_stats()["weight_tile_dots"] == 0    # gate held
+    off = sac_matmul(a, kw, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+
+
+@pytest.mark.parametrize("partition", ["contiguous", "balanced"])
+def test_act_skip_sharded_bit_exact(partition):
+    """Sharded execution with skip: the mask is computed once from the
+    replicated activations and sliced per shard — serial shard walk stays
+    bit-exact vs the skip-off walk and the unsharded kernel, under both
+    partitions (the balanced tile_slot gather is untouched by masking)."""
+    kw = knead(_sparse_w(61, 512, 512, 0.6), bits=8)
+    a = _gappy_activation(63, 2, 512, 256, 0.5)
+    skw = shard_schedule(kw, 2, partition=partition)
+    on = sac_matmul_pallas_sharded(a, skw, None, bm=8, skip_activations=True)
+    off = sac_matmul_pallas_sharded(a, skw, None, bm=8)
+    ref = sac_matmul_pallas(a, kw, bm=8)
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(ref))
 
 
 # -------------------------------------------------- logical-K direct calls
