@@ -42,9 +42,15 @@ BASELINE = pathlib.Path(__file__).resolve().parent / "artifacts" / \
 # retries come from serving_fault_sweep's deterministic fault plan: a
 # fault-handling change that starts losing requests (baseline 0 — any
 # loss fails) or needs more recovery attempts for the same injected
-# faults fails too.
+# faults fails too.  expert_imbalance is the moe_decode_sweep's static
+# per-expert work-table skew (max / mean tile-dots across the fixed-seed
+# skewed bank's experts): a kneading or bank-layout change that moves
+# work between experts shifts it and fails, alongside the sweep's gated
+# executed_tile_dots (runtime-masked routed work) and max_err (emulated
+# expert-parallel vs all-local, baselined at exactly 0.0).
 GATED = ("executed_tile_dots", "cycle_ratio", "max_err",
-         "shard_executed_max", "shard_imbalance", "p50_latency_ticks",
+         "shard_executed_max", "shard_imbalance", "expert_imbalance",
+         "p50_latency_ticks",
          "p95_latency_ticks", "total_ticks", "failed_requests", "retries")
 # higher-is-better metrics: act_skip_frac is the activation-intersected
 # skip fraction of the two-sided decode rows (docs/DESIGN.md §12) — a

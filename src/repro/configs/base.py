@@ -106,6 +106,18 @@ class ModelConfig:
                 DeprecationWarning, stacklevel=3)
             object.__setattr__(self, "impl", self.sac_impl)
             object.__setattr__(self, "sac_impl", None)
+        if self.num_experts:
+            if not (0 < self.top_k <= self.num_experts):
+                raise ValueError(
+                    f"{self.name!r}: top_k={self.top_k} must be in "
+                    f"[1, num_experts={self.num_experts}]")
+            if self.moe_dff <= 0 and self.d_ff <= 0:
+                raise ValueError(
+                    f"{self.name!r}: MoE config needs moe_dff (or d_ff) > 0")
+            if self.capacity_factor <= 0:
+                raise ValueError(
+                    f"{self.name!r}: capacity_factor must be > 0, "
+                    f"got {self.capacity_factor}")
 
     @property
     def hd(self) -> int:

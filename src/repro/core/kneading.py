@@ -38,6 +38,7 @@ from repro.core.schedule import (KneadedIntegrityError, KneadedSchedule,
                                  shard_stacked_schedule, verify_checksums)
 
 __all__ = [
+    "KNEADABLE_NAMES",
     "KneadedIntegrityError",
     "KneadedWeight",
     "ShardedKneadedWeight",
@@ -54,6 +55,15 @@ __all__ = [
     "kneaded_cycles",
     "kneading_ratio",
 ]
+
+
+# Weight-name suffixes eligible for kneading / quantized serving: 2-D
+# projection matrices, their stacked scan-layer forms, and MoE expert banks.
+# Embeddings stay bf16 (gather path); norms/gates are not matmuls.  Single
+# source of truth shared by inference.engine.knead_params and launch.specs
+# (they used to carry drifting copies).
+KNEADABLE_NAMES = ("wq", "wk", "wv", "wo", "wi", "wi_gate", "wi_up", "up",
+                   "down", "w_in", "w_out", "in_proj", "out_proj", "unembed")
 
 
 # ---------------------------------------------------------------------------
@@ -114,10 +124,12 @@ class KneadedWeight:
                  are all-zero codes whose occupancy is 0, so the kernel skips
                  them for free and the padded matmul is exact.
 
-    A *stacked* kneaded weight (:func:`knead_stacked`) carries one extra
-    leading layer axis on every array field while the statics describe the
-    per-layer dims — ``jax.lax.scan`` over such a pytree slices out layer
-    l's exact per-layer ``KneadedWeight`` each step.
+    A *stacked* kneaded weight (:func:`knead_stacked`) carries one or more
+    extra leading stack axes on every array field while the statics describe
+    the per-slice dims — ``jax.lax.scan`` over such a pytree slices out the
+    leading axis one step at a time (a [L, E, K, N] MoE bank scans to
+    per-layer [E, K, N] banks, which scan again to plain per-expert
+    ``KneadedWeight``s).
     """
 
     planes: jax.Array
@@ -205,10 +217,25 @@ class KneadedWeight:
         into a :class:`ShardedStackedKneadedWeight` (docs/DESIGN.md §8).
         ``partition="balanced"`` LPT-packs tiles on their static occupancy
         instead of contiguous slabs (docs/DESIGN.md §11)."""
+        if self.planes.ndim > 4:
+            raise ValueError(
+                "expert banks ([..., E, K, N] stacks) are placed on the "
+                "'expert' mesh axis, not N-sharded — see docs/DESIGN.md §13")
         if self.planes.ndim == 4:
             return shard_stacked_schedule(self, mesh, axis=axis,
                                           partition=partition)
         return shard_schedule(self, mesh, axis=axis, partition=partition)
+
+    def work_table(self):
+        """Static per-slice work totals: ``schedule.counts`` summed over the
+        N-tile axis, as a host numpy array shaped like the stack's leading
+        axes ([L, E] for an MoE bank, [L] for scan layers, scalar for a
+        plain 2-D weight).  This is the ``layer_shard_work``-style input
+        the routing-load / work-stealing accounting consumes: experts are
+        naturally imbalanced work, and the table quantifies it without
+        touching device data beyond the (tiny) counts array."""
+        import numpy as np
+        return np.asarray(self.schedule.counts).sum(axis=-1)
 
     def metadata_bytes(self) -> int:
         """Pass-mark metadata footprint: packed presence bits + the
@@ -308,61 +335,77 @@ def knead_stacked(
     ks: int = 256,
     n_block: int = 128,
 ) -> KneadedWeight:
-    """Knead a stacked [L, K, N] scan-layer weight, one layer at a time.
+    """Knead a stacked weight with any leading stack axes, one slice at a
+    time: [L, K, N] scan-layer weights, [E, K, N] MoE expert banks, and the
+    combined [L, E, K, N] scan-layer expert banks all take this path.
 
     The LM stacks scan over layers with stacked params, so the serving form
-    must slice per layer inside ``jax.lax.scan``.  Every layer is kneaded
-    *independently* (its own per-out-channel scales, occupancy map, and
-    compacted schedule — layer l's work lists are exactly what
-    ``knead_padded(w[l])`` would build) and the resulting arrays stack with
-    a leading layer axis: ``planes [L, B-1, K/32, N]``, ``signs``, ``scale``,
-    ``occupancy``, and the schedule's ``counts [L, NN]`` /
-    ``plane_ids``/``ktile_ids [L, NN, num_work]``.  Scanning this pytree as
-    ``xs`` hands the body layer l's :class:`KneadedWeight`, bit-identical to
-    the unstacked knead of that layer.
+    must slice per leading axis inside ``jax.lax.scan`` (an expert bank is
+    sliced a second time, per local expert, inside the MoE dispatch).  Every
+    slice is kneaded *independently* (its own per-out-channel scales,
+    occupancy map, and compacted schedule — slice s's work lists are exactly
+    what ``knead_padded(w[s])`` would build) and the resulting arrays stack
+    with the leading stack axes: ``planes [*S, B-1, K/32, N]``, ``signs``,
+    ``scale``, ``occupancy``, and the schedule's ``counts [*S, NN]`` /
+    ``plane_ids``/``ktile_ids [*S, NN, num_work]``.  Scanning this pytree as
+    ``xs`` hands the body slice s's :class:`KneadedWeight`, bit-identical to
+    the unstacked knead of that slice.
 
-    The work dimension is padded to the *max* ``num_work`` across layers by
+    The work dimension is padded to the *max* ``num_work`` across slices by
     repeating each N-tile's last item — the same convention as intra-tile
     ragged padding, so padded grid steps re-request resident blocks and idle
-    under the kernel's ``w < counts[j]`` guard.  Statics on the stacked
-    weight: ``num_work`` is the cross-layer max and ``total_work`` the
-    all-layer sum (a per-layer slice therefore reports the stack totals —
-    use :func:`knead_padded` per layer when per-layer accounting matters).
+    under the kernel's ``w < counts[j]`` guard.  A fully-empty slice (an
+    expert pruned to all-zero weights) has no last item to repeat and pads
+    with item 0 instead; its counts are all zero, so the guard masks every
+    step.  Statics on the stacked weight: ``num_work`` is the cross-slice
+    max and ``total_work`` the all-slice sum (a per-slice view therefore
+    reports the stack totals — use :meth:`KneadedWeight.work_table` or
+    :func:`knead_padded` per slice when per-slice accounting matters).
     """
-    if w.ndim != 3:
-        raise ValueError(f"knead_stacked expects [L, K, N], got {w.shape}")
-    per_layer = [knead_padded(w[layer], bits=bits, ks=ks, n_block=n_block)
-                 for layer in range(w.shape[0])]
-    num_work = max(kw.schedule.num_work for kw in per_layer)
+    if w.ndim < 3:
+        raise ValueError(
+            f"knead_stacked expects [*stack, K, N] with >=1 stack axis, "
+            f"got {w.shape}")
+    lead = w.shape[:-2]
+    flat = w.reshape((-1,) + w.shape[-2:])
+    per_slice = [knead_padded(flat[s], bits=bits, ks=ks, n_block=n_block)
+                 for s in range(flat.shape[0])]
+    num_work = max(kw.schedule.num_work for kw in per_slice)
 
     def pad_work(ids: jax.Array, have: int) -> jax.Array:
         if have == num_work:
             return ids
+        if have == 0:   # empty slice: no last item to repeat; counts==0
+            return jnp.zeros((ids.shape[0], num_work), ids.dtype)
         return jnp.concatenate(
             [ids, jnp.repeat(ids[:, -1:], num_work - have, axis=1)], axis=1)
 
-    first = per_layer[0]
+    def restack(xs):
+        arr = jnp.stack(xs)
+        return arr.reshape(lead + arr.shape[1:])
+
+    first = per_slice[0]
     sched = KneadedSchedule(
-        counts=jnp.stack([kw.schedule.counts for kw in per_layer]),
-        plane_ids=jnp.stack([pad_work(kw.schedule.plane_ids,
-                                      kw.schedule.num_work)
-                             for kw in per_layer]),
-        ktile_ids=jnp.stack([pad_work(kw.schedule.ktile_ids,
-                                      kw.schedule.num_work)
-                             for kw in per_layer]),
+        counts=restack([kw.schedule.counts for kw in per_slice]),
+        plane_ids=restack([pad_work(kw.schedule.plane_ids,
+                                    kw.schedule.num_work)
+                           for kw in per_slice]),
+        ktile_ids=restack([pad_work(kw.schedule.ktile_ids,
+                                    kw.schedule.num_work)
+                           for kw in per_slice]),
         num_work=num_work,
-        total_work=sum(kw.schedule.total_work for kw in per_layer),
+        total_work=sum(kw.schedule.total_work for kw in per_slice),
         nk=first.schedule.nk,
         n_tiles=first.schedule.n_tiles,
     )
     return dataclasses.replace(
         first,
-        planes=jnp.stack([kw.planes for kw in per_layer]),
-        signs=jnp.stack([kw.signs for kw in per_layer]),
-        scale=jnp.stack([kw.scale for kw in per_layer]),
-        occupancy=jnp.stack([kw.occupancy for kw in per_layer]),
+        planes=restack([kw.planes for kw in per_slice]),
+        signs=restack([kw.signs for kw in per_slice]),
+        scale=restack([kw.scale for kw in per_slice]),
+        occupancy=restack([kw.occupancy for kw in per_slice]),
         schedule=sched,
-    ).with_checksums()     # re-stamp: layer-0 CRCs don't cover the stack
+    ).with_checksums()     # re-stamp: slice-0 CRCs don't cover the stack
 
 
 def reknead_like(kw: Union[KneadedWeight, ShardedKneadedWeight],
@@ -382,7 +425,7 @@ def reknead_like(kw: Union[KneadedWeight, ShardedKneadedWeight],
     repairs to the identical LPT packing (deterministic on identical
     counts), so the repair stays bit-identical.
     """
-    stacked = w_float.ndim == 3
+    stacked = w_float.ndim >= 3
     fresh = (knead_stacked if stacked else knead_padded)(
         w_float, bits=kw.bits, ks=kw.ks, n_block=kw.n_block)
     if shards > 1 or isinstance(kw, ShardedKneadedWeight):

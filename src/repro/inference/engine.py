@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -38,7 +39,8 @@ from repro.inference.frontend import (RequestFrontEnd, RequestHandle,
                                       validate_buckets)
 from repro.inference.resilience import ServingFaultPolicy, verify_kneaded_tree
 from repro.inference.scheduler import ContinuousScheduler
-from repro.core.kneading import (KneadedWeight, ShardedKneadedWeight,
+from repro.core.kneading import (KNEADABLE_NAMES, KneadedWeight,
+                                 ShardedKneadedWeight,
                                  knead_padded, knead_stacked,
                                  shard_schedule, shard_stacked_schedule)
 from repro.core.quantization import quantize
@@ -49,8 +51,11 @@ from repro.models.lm import LanguageModel
 
 PyTree = Any
 
-_KNEADABLE = ("wq", "wk", "wv", "wo", "wi", "wi_gate", "wi_up", "up",
-              "down", "w_in", "w_out", "in_proj", "out_proj", "unembed")
+_log = logging.getLogger(__name__)
+
+# single shared definition (repro.core.kneading) — launch/specs.py reads the
+# same tuple, so the two serving paths can't drift on what gets kneaded
+_KNEADABLE = KNEADABLE_NAMES
 
 
 def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
@@ -65,11 +70,14 @@ def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
 
     ``kneaded=True``: the full bit-plane serving form — [K, N] leaves via
     :func:`~repro.core.kneading.knead_padded` (arbitrary dims zero-padded to
-    tile alignment, exactly), stacked [L, K, N] scan-layer leaves via
-    :func:`~repro.core.kneading.knead_stacked` (per-layer schedules with a
-    leading layer axis, sliced out by the model's layer scans).  Leaves with
-    more than one stack dim (MoE expert banks — executed inside shard_map)
-    stay float; ``min_dim`` gates tiny projections either way.
+    tile alignment, exactly), leaves with any leading stack axes via
+    :func:`~repro.core.kneading.knead_stacked` (per-slice schedules with the
+    stack axes in front, sliced out by the model's layer scans): [L, K, N]
+    scan-layer weights AND [L, E, K, N] MoE expert banks (docs/DESIGN.md
+    §13 — each expert kneaded independently, served per-expert through the
+    SAC decode-GEMV path).  ``min_dim`` gates tiny projections either way;
+    kneadable leaves that stay un-kneaded are named in a one-line warning
+    instead of silently serving their float/quant form.
 
     ``shards=N`` (with ``kneaded=True``) then partitions every kneaded
     leaf's work lists along N — stacked leaves per layer
@@ -77,13 +85,16 @@ def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
     :func:`~repro.core.kneading.shard_schedule` — producing the mesh-ready
     sharded serving tree of docs/DESIGN.md §8 (a plain int here: placement
     happens at ``device_put`` time via
-    ``runtime.sharding.kneaded_shardings``).
+    ``runtime.sharding.kneaded_shardings``).  Expert banks are NOT
+    N-sharded: they place whole experts on the "expert" mesh axis
+    (``ServingConfig.expert_shards``).
     """
     if shards > 1 and not kneaded:
         raise ValueError("shards applies to the kneaded serving form only "
                          "(pass kneaded=True)")
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
+    unkneaded = []
     for path, leaf in flat:
         keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
         name = keys[-1] if keys else ""
@@ -92,9 +103,12 @@ def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
               and leaf.shape[-2] % 2 == 0)
         if kneaded:
             ok = (name in _KNEADABLE and hasattr(leaf, "ndim")
-                  and leaf.ndim in (2, 3)
+                  and leaf.ndim >= 2
                   and leaf.shape[-1] >= min_dim
                   and leaf.shape[-2] >= min_dim)
+            if not ok and name in _KNEADABLE and hasattr(leaf, "ndim"):
+                unkneaded.append("/".join(keys) +
+                                 f" {tuple(leaf.shape)}")
         if not ok:
             out.append(leaf)
             continue
@@ -106,7 +120,9 @@ def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
                                         partition=shard_partition)
             else:
                 kw = knead_stacked(leaf, bits=bits, ks=ks, n_block=n_block)
-                if shards > 1:
+                if shards > 1 and leaf.ndim == 3:
+                    # expert banks (ndim >= 4) are never N-sharded: whole
+                    # experts place on the "expert" mesh axis instead
                     kw = shard_stacked_schedule(kw, shards,
                                                 partition=shard_partition)
             out.append(kw)
@@ -121,6 +137,9 @@ def knead_params(params: PyTree, bits: int = 8, min_dim: int = 128,
             out.append(PackedInt4(packed=packed, scale=scale, k=k))
         else:
             out.append(dataclasses.replace(qt, scale=scale))
+    if unkneaded:
+        _log.warning("serving un-kneaded (below min_dim=%d): %s",
+                     min_dim, ", ".join(unkneaded))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -171,6 +190,15 @@ class ServingConfig:
     #                  a recorded permutation gathered back after the
     #                  per-device kernels (bit-exact either way)
     shard_partition: str = "contiguous"
+    # Expert parallelism for kneaded MoE banks (docs/DESIGN.md §13): place
+    # whole experts of every [L, E, K, N] kneaded bank on a dedicated
+    # "expert" mesh axis (0/1 = all experts local).  Orthogonal to
+    # ``shards`` — the mesh becomes ("expert", "model"), expert banks
+    # shard on "expert", the dense projections' N-shards stay on "model".
+    # Requires a kneaded impl ("int"/"planes"/"pallas") and
+    # num_experts % expert_shards == 0; bit-exact vs all-experts-local
+    # through the combine psum.
+    expert_shards: int = 0
     mesh_axis: str = "model"
     # submit()/drain() batching: micro-batch padding buckets (ascending)
     # and the sliding per-request latency log window.
@@ -215,6 +243,19 @@ class ServingEngine(RequestFrontEnd):
         if scfg.shards > 1 and scfg.impl != "pallas":
             raise ValueError("sharded serving runs the Pallas kernel; "
                              f"impl={scfg.impl!r} is single-device only")
+        if scfg.expert_shards > 1:
+            if scfg.impl not in SAC_IMPLS:
+                raise ValueError(
+                    "expert_shards places kneaded expert banks on the "
+                    f"'expert' mesh axis; impl={scfg.impl!r} does not "
+                    f"knead (use one of {SAC_IMPLS})")
+            if not cfg.num_experts:
+                raise ValueError("expert_shards requires an MoE config "
+                                 f"(num_experts=0 in {cfg.name!r})")
+            if cfg.num_experts % scfg.expert_shards:
+                raise ValueError(
+                    f"num_experts={cfg.num_experts} not divisible by "
+                    f"expert_shards={scfg.expert_shards}")
         if scfg.scheduler not in ("batch", "continuous"):
             raise ValueError(f"scheduler must be 'batch' or 'continuous', "
                              f"got {scfg.scheduler!r}")
@@ -260,10 +301,12 @@ class ServingEngine(RequestFrontEnd):
                 # host, so sharded trees verify pre-device_put
                 self.params, integrity_report = verify_kneaded_tree(
                     self.params, self._float_params, shards=scfg.shards)
-            if scfg.shards > 1:
-                from repro.launch.mesh import make_model_mesh
+            if scfg.shards > 1 or scfg.expert_shards > 1:
+                from repro.launch.mesh import make_serving_mesh
                 from repro.runtime.sharding import kneaded_shardings
-                self.mesh = make_model_mesh(scfg.shards)
+                self.mesh = make_serving_mesh(
+                    max(scfg.shards, 1),
+                    expert_shards=max(scfg.expert_shards, 1))
                 self.params = jax.device_put(
                     self.params, kneaded_shardings(self.params, self.mesh,
                                                    axis=scfg.mesh_axis))
@@ -333,6 +376,28 @@ class ServingEngine(RequestFrontEnd):
         for row in report:
             self._fault_event("integrity_repairs", **row)
         return report
+
+    def expert_work_table(self) -> Dict[str, Any]:
+        """Static per-(layer, expert) kneaded work tables, one [L, E] host
+        numpy array per kneaded expert bank ({path: table}).
+
+        The ``layer_shard_work`` analogue for expert parallelism
+        (docs/DESIGN.md §13): entry [l, e] is how many (plane, K-tile,
+        N-tile) work items expert e of layer l owns in the compacted
+        schedule — the static side of the routing-load accounting
+        (``latency_stats()``'s ``routed_tokens``/``capacity_dropped``
+        counters are the dynamic side), and the input the ROADMAP
+        work-stealing item needs.  Empty for non-MoE / un-kneaded engines.
+        """
+        tables: Dict[str, Any] = {}
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            self.params, is_leaf=lambda x: isinstance(x, KneadedWeight))
+        for path, leaf in flat:
+            if isinstance(leaf, KneadedWeight) and leaf.planes.ndim >= 5:
+                name = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                                for k in path)
+                tables[name] = leaf.work_table()
+        return tables
 
     def _mesh_ctx(self):
         """Serving-mesh context the sharded kneaded matmuls dispatch under

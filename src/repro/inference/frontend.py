@@ -201,6 +201,10 @@ class RequestFrontEnd:
         # construction and latency_stats() reports its own delta.
         from repro.core import activation_occupancy
         self._skip_stats_base = activation_occupancy.skip_stats()
+        # MoE routing-load accounting (docs/DESIGN.md §13): same process-
+        # global counter pattern — snapshot at construction, report deltas.
+        from repro.core import routing_stats
+        self._routing_stats_base = routing_stats.routing_stats()
 
     def _fault_event(self, kind: str, **detail: Any) -> None:
         self._fault_counters[kind] += 1
@@ -277,7 +281,8 @@ class RequestFrontEnd:
             return {"requests": 0,
                     **{k: int(v) for k, v in self._fault_counters.items()
                        if v},
-                    **self._skip_stats_delta()}
+                    **self._skip_stats_delta(),
+                    **self._routing_stats_delta()}
         out = {
             "requests": int(lat.size),
             "mean_ms": float(lat.mean()),
@@ -301,6 +306,9 @@ class RequestFrontEnd:
         # activation-skip accounting (docs/DESIGN.md §12): present only
         # when masked launches actually ran under this engine
         out.update(self._skip_stats_delta())
+        # MoE routing load (docs/DESIGN.md §13): present only when routed
+        # MoE layers actually ran under this engine
+        out.update(self._routing_stats_delta())
         return out
 
     def _skip_stats_delta(self) -> Dict[str, float]:
@@ -319,4 +327,21 @@ class RequestFrontEnd:
         return {"executed_tile_dots": int(executed),
                 "weight_tile_dots": int(weight),
                 "act_skip_frac": float(1.0 - executed / weight)}
+
+    def _routing_stats_delta(self) -> Dict[str, int]:
+        """This engine's MoE routing load since construction: per-step
+        routed (token, expert) assignment counts and capacity-overflow
+        drops — empty when no MoE layer ran, so stats dicts are unchanged
+        for dense engines."""
+        from repro.core import routing_stats
+        cur = routing_stats.routing_stats()
+        steps = cur["routing_steps"] - self._routing_stats_base["routing_steps"]
+        if steps <= 0:
+            return {}
+        return {"routed_tokens": int(cur["routed_tokens"]
+                                     - self._routing_stats_base["routed_tokens"]),
+                "capacity_dropped": int(
+                    cur["capacity_dropped"]
+                    - self._routing_stats_base["capacity_dropped"]),
+                "routing_steps": int(steps)}
 

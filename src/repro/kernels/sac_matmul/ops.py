@@ -19,7 +19,11 @@ one launch whose peak VMEM footprint is still a single block.
 one launch per device, each device walking *its own shard's* compacted work
 list (a :class:`~repro.core.schedule.ShardedKneadedWeight`, or a per-layer
 scan slice of a stacked LM
-:class:`~repro.core.schedule.ShardedStackedKneadedWeight`).  Activations
+:class:`~repro.core.schedule.ShardedStackedKneadedWeight`).  Kneaded MoE
+expert banks take a different route entirely: whole experts live on the
+"expert" mesh axis and each expert's 2-D slice reaches ``sac_matmul_pallas``
+through the block-level ``lax.scan`` (docs/DESIGN.md §13) — banks never
+enter the sharded N-split entry here.  Activations
 are replicated, outputs concatenate along N with no collective in the
 matmul itself; per-device executed MXU passes equal that shard's occupancy
 nonzeros.  The GEMV decode fast path survives sharding: ``_pad_activations``
@@ -86,7 +90,19 @@ def sac_matmul_pallas(
     have contributed exactly 0.0 to its f32 segment, and surviving items
     keep their k-major order.  ``core.sac.sac_matmul`` gates this to the
     decode-GEMV regime; this raw entry applies it at any M when asked.
+
+    The kernel itself is strictly 2-D: stacked weights (LM layer stacks,
+    MoE expert banks — planes ndim > 3) must be sliced to one [K, N]
+    kneaded weight per call (``lax.scan`` over the stack axes, as
+    ``models.blocks._dispatch_compute_kneaded`` does for expert banks;
+    docs/DESIGN.md §13).
     """
+    if kw.planes.ndim > 3:
+        raise ValueError(
+            f"sac_matmul_pallas is a 2-D [K, N] kernel; got stacked planes "
+            f"{kw.planes.shape} — scan/index the leading stack axes down to "
+            f"one slice first (expert banks: models.blocks."
+            f"_dispatch_compute_kneaded, docs/DESIGN.md §13)")
     if interpret is None:
         interpret = not _on_tpu()
     a, m, bm_eff = _pad_activations(a, kw, bm)

@@ -44,6 +44,28 @@ def make_model_mesh(num_devices: int | None = None):
     return jax.sharding.Mesh(np.asarray(devs), ("model",))
 
 
+def make_serving_mesh(model_shards: int = 1, *, expert_shards: int = 1):
+    """The kneaded serving mesh (docs/DESIGN.md §8, §13).
+
+    ``expert_shards <= 1`` keeps the historical 1-D ("model",) mesh —
+    N-shards of every compacted schedule, one per device.  With
+    ``expert_shards > 1`` the mesh becomes 2-D ("expert", "model") over the
+    first ``expert_shards * model_shards`` devices: kneaded MoE expert
+    banks shard whole experts on "expert" while the dense projections'
+    N-shards stay on "model" (each axis replicates over the other).
+    """
+    if expert_shards <= 1:
+        return make_model_mesh(model_shards)
+    import numpy as np
+    need = expert_shards * model_shards
+    devs = jax.devices()
+    if need > len(devs):
+        raise ValueError(f"requested {expert_shards}x{model_shards} devices, "
+                         f"only {len(devs)} visible")
+    arr = np.asarray(devs[:need]).reshape(expert_shards, model_shards)
+    return jax.sharding.Mesh(arr, ("expert", "model"))
+
+
 # v5e hardware constants used by the roofline analysis (benchmarks/roofline).
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

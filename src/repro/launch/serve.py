@@ -38,6 +38,13 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="shard kneaded schedules over this many 'model'-"
                          "mesh devices (requires --impl pallas)")
+    ap.add_argument("--expert-shards", type=int, default=0,
+                    help="shard kneaded MoE expert banks over this many "
+                         "'expert'-mesh devices (whole experts per device; "
+                         "composes with --shards into a 2-D "
+                         "('expert','model') mesh; requires a kneaded impl "
+                         "and num_experts %% expert_shards == 0; "
+                         "docs/DESIGN.md §13)")
     ap.add_argument("--shard-partition", default="contiguous",
                     choices=["contiguous", "balanced"],
                     help="tile→shard partitioning of sharded schedules: "
@@ -124,6 +131,7 @@ def main():
         quant_bits=args.quant, temperature=args.temperature,
         impl=args.impl, knead_min_dim=args.knead_min_dim,
         shards=args.shards, shard_partition=args.shard_partition,
+        expert_shards=args.expert_shards,
         activation_skip=args.activation_skip,
         scheduler=args.scheduler,
         max_inflight=args.max_inflight, fault_policy=fault_policy))
@@ -134,8 +142,16 @@ def main():
     else:
         precision = f"int{args.quant}" if args.quant else "bf16"
     shard_note = f", {args.shards}-way model mesh" if args.shards > 1 else ""
+    if args.expert_shards > 1:
+        shard_note += f", {args.expert_shards}-way expert mesh"
     print(f"serving params: {serving_bytes(eng.params)/1e6:.2f} MB "
           f"(impl={args.impl}, {precision}{shard_note})")
+    work = eng.expert_work_table()
+    for path, table in work.items():
+        per_e = table.sum(axis=tuple(range(table.ndim - 1)))
+        imb = float(per_e.max() / max(per_e.mean(), 1e-9))
+        print(f"expert work {path}: per-expert tile-dots "
+              f"{per_e.tolist()} (imbalance {imb:.2f}x)")
 
     key = jax.random.PRNGKey(7)
     prompts = jax.random.randint(
@@ -180,6 +196,10 @@ def main():
                   f"{stats['queue_wait_p95_ms']:.1f} ms | decode p50/p95: "
                   f"{stats['decode_p50_ms']:.1f}/"
                   f"{stats['decode_p95_ms']:.1f} ms")
+    if "routed_tokens" in stats:
+        print(f"routing: {stats['routed_tokens']} tokens routed over "
+              f"{stats['routing_steps']} steps, "
+              f"{stats['capacity_dropped']} dropped at capacity")
     if args.activation_skip and "act_skip_frac" in stats:
         print(f"activation skip: {stats['executed_tile_dots']} of "
               f"{stats['weight_tile_dots']} scheduled tile-dots executed "

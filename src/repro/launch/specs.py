@@ -31,10 +31,10 @@ from repro.train.step import TrainStepConfig, make_train_step
 
 PyTree = Any
 
-# weight-name suffixes eligible for kneading (2-D projection matrices);
+# weight-name suffixes eligible for kneading — single definition shared
+# with inference.engine.knead_params lives beside the kneader itself;
 # embeddings stay bf16 (gather path), norms/gates are not matmuls.
-_KNEADABLE = ("wq", "wk", "wv", "wo", "wi", "wi_gate", "wi_up", "up",
-              "down", "w_in", "w_out", "in_proj", "out_proj", "unembed")
+from repro.core.kneading import KNEADABLE_NAMES as _KNEADABLE
 
 
 def _sds(shape, dtype, mesh: Mesh, spec: P):

@@ -10,6 +10,16 @@ replicated (router weight is tiny), dispatch/expert-compute/combine run under
 combine — the same reduction pattern as Megatron TP, so no extra collective
 class is introduced.  Without a mesh the identical dispatch code runs with
 all experts local (smoke tests).
+
+Kneaded expert banks (docs/DESIGN.md §13) take a second serving path: when
+``p["wi"]``/``p["wo"]`` are stacked :class:`~repro.core.kneading.KneadedWeight`
+banks ([E, K, N] per layer), the capacity-padded dense einsum is replaced by a
+per-expert walk — each local expert's routed rows ([cap, D], M <= 8 at decode)
+run through the SAC kernel's decode-GEMV fast path with the activation-skip
+mask computed from exactly those routed rows.  Experts shard over the
+dedicated "expert" mesh axis (the "model" axis keeps N-sharding the dense
+projections); slot routing and the f32 scatter-add combine are shared with
+the dense path, so EP == all-local stays bit-exact through the psum.
 """
 from __future__ import annotations
 
@@ -316,18 +326,18 @@ def _expert_matmul(xg, q, scale, packed4, dtype):
     return h
 
 
-def _dispatch_compute(x2d, eids, gates, wi, wi_scale, wo, wo_scale,
-                      *, cfg: ModelConfig, e_offset, cap: int, dtype,
-                      wi_packed4=False, wo_packed4=False):
-    """Expert-compute for the local expert slice [e_loc] on local tokens.
+def _route_slots(x2d, eids, gates, e_loc: int, e_offset, cap: int):
+    """Capacity-slot routing shared by the dense and kneaded expert paths.
 
-    x2d [T, D]; eids/gates [T, k] global expert ids / combine weights;
-    wi [e_loc, D, F'], wo [e_loc, F, D] (float or integer codes with
-    per-channel scales — the kneaded serving path).  Returns [T, D] (this
-    shard's experts' contribution only — caller psums over "model").
+    Computes, for the local expert slice [e_loc], which token feeds each
+    (expert, capacity) slot and gathers those rows.  Returns
+    ``(xg [e_loc, cap, D], disp [e_loc*cap], slot_gate [e_loc*cap])``.
+    Sharing this (and :func:`_combine_slots`) between the paths is
+    load-bearing for bit-exactness: identical slot order means identical
+    f32 scatter-add pairing in the combine, so kneaded EP == all-local
+    reduces in the same order the dense path always has.
     """
     t, d = x2d.shape
-    e_loc = wi.shape[0]
     k = eids.shape[1]
     flat_e = eids.reshape(-1)                       # [T*k]
     flat_g = gates.reshape(-1)
@@ -345,6 +355,30 @@ def _dispatch_compute(x2d, eids, gates, wi, wi_scale, wo, wo_scale,
         jnp.where(valid, flat_g, 0.0))[:-1]
     x_pad = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
     xg = x_pad[disp].reshape(e_loc, cap, d)              # gather
+    return xg, disp, slot_gate
+
+
+def _combine_slots(y, disp, slot_gate, t: int, out_dtype):
+    """Gate-weighted f32 scatter-add of per-slot outputs back to tokens."""
+    d = y.shape[-1]
+    y_flat = y.reshape(-1, d).astype(jnp.float32) * slot_gate[:, None]
+    out = jnp.zeros((t + 1, d), jnp.float32).at[disp].add(y_flat)[:-1]
+    return out.astype(out_dtype)
+
+
+def _dispatch_compute(x2d, eids, gates, wi, wi_scale, wo, wo_scale,
+                      *, cfg: ModelConfig, e_offset, cap: int, dtype,
+                      wi_packed4=False, wo_packed4=False):
+    """Expert-compute for the local expert slice [e_loc] on local tokens.
+
+    x2d [T, D]; eids/gates [T, k] global expert ids / combine weights;
+    wi [e_loc, D, F'], wo [e_loc, F, D] (float or integer codes with
+    per-channel scales — the quantized serving path).  Returns [T, D] (this
+    shard's experts' contribution only — caller psums over "model").
+    """
+    t, _ = x2d.shape
+    e_loc = wi.shape[0]
+    xg, disp, slot_gate = _route_slots(x2d, eids, gates, e_loc, e_offset, cap)
     h = _expert_matmul(xg, wi, wi_scale, wi_packed4, dtype)
     if cfg.activation == "swiglu":
         gate_h, up = jnp.split(h, 2, axis=-1)
@@ -352,10 +386,103 @@ def _dispatch_compute(x2d, eids, gates, wi, wi_scale, wo, wo_scale,
     else:
         h = layers.activate(h, cfg.activation)
     y = _expert_matmul(h, wo, wo_scale, wo_packed4, dtype)
-    y_flat = (y.reshape(e_loc * cap, d).astype(jnp.float32)
-              * slot_gate[:, None])
-    out = jnp.zeros((t + 1, d), jnp.float32).at[disp].add(y_flat)[:-1]
-    return out.astype(x2d.dtype)
+    return _combine_slots(y, disp, slot_gate, t, x2d.dtype)
+
+
+def _dispatch_compute_kneaded(x2d, eids, gates, kwi, kwo,
+                              *, cfg: ModelConfig, e_offset, cap: int, dtype,
+                              combine_dtype=None):
+    """Kneaded expert-compute: per-expert SAC matmuls on the routed rows.
+
+    ``kwi``/``kwo`` are per-layer expert banks — stacked
+    :class:`~repro.core.kneading.KneadedWeight` with a leading local-expert
+    axis ([e_loc, ...] arrays; scanning slices expert e's exact per-expert
+    kneaded weight).  Instead of the capacity-padded [E, C, D] dense slab,
+    each expert runs only its own gathered [cap, D] rows through
+    ``matmul_any`` -> SAC: at decode cap <= 8, so this is the decode-GEMV
+    fast path and the PR-9 activation-skip mask is computed from exactly
+    the routed rows (unfilled capacity slots gather the zero pad row and
+    contribute no K-tile presence — routing sparsity becomes skipped MXU
+    passes for free).  Routing and combine are shared with the dense path
+    (:func:`_route_slots` / :func:`_combine_slots`), so the f32 reduction
+    order — and therefore bit-exactness of EP vs all-local through the
+    psum — is unchanged.  ``combine_dtype`` overrides the combine output
+    dtype: the EP shard function passes f32 so each shard's partial stays
+    unrounded through the psum (a token's top-k experts can straddle
+    shards — rounding per shard and again after the psum would double-round
+    exactly those tokens; summing in f32 and rounding once after the psum
+    reproduces the all-local reduction bit for bit).
+    """
+    t, _ = x2d.shape
+    e_loc = kwi.planes.shape[0]
+    if combine_dtype is None:
+        combine_dtype = x2d.dtype
+    xg, disp, slot_gate = _route_slots(x2d, eids, gates, e_loc, e_offset, cap)
+    impl, skip = cfg.impl, cfg.activation_skip
+
+    def expert_body(carry, ew):
+        kwi_e, kwo_e, xg_e = ew
+        h = matmul_any(xg_e, kwi_e, dtype, impl=impl, skip_activations=skip)
+        if cfg.activation == "swiglu":
+            gate_h, up = jnp.split(h, 2, axis=-1)
+            h = jax.nn.silu(gate_h) * up
+        else:
+            h = layers.activate(h, cfg.activation)
+        y_e = matmul_any(h, kwo_e, dtype, impl=impl, skip_activations=skip)
+        return carry, y_e
+
+    _, y = jax.lax.scan(expert_body, None, (kwi, kwo, xg))
+    return _combine_slots(y, disp, slot_gate, t, combine_dtype)
+
+
+def _moe_kneaded(h2, e2, g2, kwi, kwo, *, cfg: ModelConfig, mesh,
+                 n_tokens: int, dtype):
+    """Serve the kneaded expert banks, expert-parallel over "expert".
+
+    The bank is sharded on the dedicated "expert" mesh axis when present
+    (size > 1 and dividing E); the "model" axis keeps N-sharding the dense
+    projections and simply replicates this computation.  Without an expert
+    axis the identical dispatch runs with all experts local — the bit-exact
+    oracle the EP acceptance tests compare against.
+    """
+    if mesh is None:
+        # The serving engine installs its mesh via runtime.sharding's
+        # threadlocal, not pspec.axis_rules — fall back so EP activates.
+        from repro.runtime.sharding import current_serving_mesh
+        mesh = current_serving_mesh()[0]
+    e = cfg.num_experts
+    cap = _capacity(n_tokens, cfg)
+    ep = (mesh is not None and "expert" in mesh.axis_names
+          and mesh.shape["expert"] > 1 and e % mesh.shape["expert"] == 0)
+    if not ep:
+        return _dispatch_compute_kneaded(h2, e2, g2, kwi, kwo, cfg=cfg,
+                                         e_offset=0, cap=cap, dtype=dtype)
+    from jax.experimental.shard_map import shard_map
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    e_loc = e // mesh.shape["expert"]
+
+    def shard_fn(h_l, e_l, g_l, kwi_l, kwo_l):
+        off = jax.lax.axis_index("expert") * e_loc
+        # combine in f32 and round once after the psum: a token's top-k
+        # experts can straddle expert shards, and per-shard rounding to the
+        # activation dtype before the psum double-rounds those tokens vs
+        # the all-local oracle
+        y = _dispatch_compute_kneaded(h_l, e_l, g_l, kwi_l, kwo_l, cfg=cfg,
+                                      e_offset=off, cap=cap, dtype=dtype,
+                                      combine_dtype=jnp.float32)
+        return jax.lax.psum(y, "expert").astype(h_l.dtype)
+
+    # every bank array carries the (local) expert axis leading -> a uniform
+    # P("expert") pytree spec shards dim 0 and replicates the rest
+    bank_spec = jax.tree.map(lambda _: P("expert"), kwi)
+    return shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(batch_axes, None), P(batch_axes, None),
+                  P(batch_axes, None), bank_spec,
+                  jax.tree.map(lambda _: P("expert"), kwo)),
+        out_specs=P(batch_axes, None),
+        check_rep=False,
+    )(h2, e2, g2, kwi, kwo)
 
 
 def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
@@ -378,9 +505,22 @@ def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
 
     h2, e2, g2 = (h.reshape(b * s, d), eids.reshape(b * s, -1),
                   gates.reshape(b * s, -1))
+    mesh = pspec.current_mesh()
+    from repro.core import routing_stats
+    from repro.core.kneading import KneadedWeight
+    routing_stats.record_routing(e2, cfg.num_experts,
+                                 _capacity(b * s, cfg))
+    if isinstance(p["wi"], KneadedWeight):
+        y2 = _moe_kneaded(h2, e2, g2, p["wi"], p["wo"], cfg=cfg, mesh=mesh,
+                          n_tokens=b * s, dtype=dtype)
+        y = y2.reshape(b, s, d)
+        if cfg.dense_residual:
+            dense_h = layers.apply_norm(p["dense"]["ln"], x, cfg.norm)
+            y = y + _ffn(dense_h, p["dense"], cfg.activation, dtype,
+                         impl=cfg.impl, skip=cfg.activation_skip)
+        return res_constrain(x + y.astype(x.dtype), cfg), aux
     wi_q, wi_s, wi_p4 = _split_quant(p["wi"])
     wo_q, wo_s, wo_p4 = _split_quant(p["wo"])
-    mesh = pspec.current_mesh()
     ep_axes = [a for a in ("model",) if mesh is not None
                and a in mesh.axis_names and mesh.shape[a] > 1]
     if not ep_axes:

@@ -21,7 +21,11 @@ Logical = Union[str, None, Tuple[str, ...]]
 DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
     "batch": ("pod", "data"),
     "model": ("model",),
-    "expert": ("model",),
+    # Experts prefer the dedicated "expert" axis of the 2-D serving mesh
+    # (launch.mesh.make_serving_mesh, docs/DESIGN.md §13); on meshes
+    # without one (training, 1-D serving) the axis filter below falls back
+    # to the historical EP-over-"model" placement.
+    "expert": ("expert", "model"),
     "seq": ("model",),  # sequence-parallel residuals (cfg.sequence_parallel)
 }
 

@@ -260,8 +260,9 @@ def tree_shardings(params_shape: PyTree, mesh: Mesh,
 
 # ------------------------------------------------------- kneaded CNN serving
 
-def kneaded_param_specs(tree: PyTree, axis: str = "model") -> PyTree:
-    """PartitionSpecs for a kneaded param tree (docs/DESIGN.md §5, §8).
+def kneaded_param_specs(tree: PyTree, axis: str = "model",
+                        mesh: Optional[Mesh] = None) -> PyTree:
+    """PartitionSpecs for a kneaded param tree (docs/DESIGN.md §5, §8, §13).
 
     :class:`~repro.core.schedule.ShardedKneadedWeight` leaves stack one
     weight/schedule slab per device on their leading shard axis — every
@@ -272,11 +273,20 @@ def kneaded_param_specs(tree: PyTree, axis: str = "model") -> PyTree:
     the scan-layer axis in front (``[L, S, ...]``) and get
     ``P(None, axis)`` — the layer axis is never sharded (it is the
     ``lax.scan`` slice axis), the shard axis maps one slab per device.
-    Unsharded leaves (biases, float weights, unsharded ``KneadedWeight``)
-    replicate: they are tiny or consumed by every device's epilogue.
+    Kneaded MoE expert banks (plain ``KneadedWeight`` with ``[L, E, ...]``
+    arrays, i.e. 5-dim planes) place whole experts on the "expert" mesh
+    axis when ``mesh`` has one that divides E — every array field gets
+    ``P(None, "expert")`` (layer axis scanned, expert axis sharded, the
+    per-expert weight/schedule slabs replicated over "model").
+    Other unsharded leaves (biases, float weights, unsharded
+    ``KneadedWeight``) replicate: they are tiny or consumed by every
+    device's epilogue.
     """
+    from repro.core.kneading import KneadedWeight
     from repro.core.schedule import (ShardedKneadedWeight,
                                      ShardedStackedKneadedWeight)
+    has_expert = mesh is not None and "expert" in mesh.axis_names \
+        and mesh.shape["expert"] > 1
 
     def spec(leaf):
         # tile_slot replicates: it is the whole-weight tile permutation
@@ -287,11 +297,16 @@ def kneaded_param_specs(tree: PyTree, axis: str = "model") -> PyTree:
         if isinstance(leaf, ShardedKneadedWeight):
             return dataclasses.replace(
                 jax.tree.map(lambda _: P(axis), leaf), tile_slot=P())
+        if (isinstance(leaf, KneadedWeight) and leaf.planes.ndim >= 5
+                and has_expert
+                and leaf.planes.shape[1] % mesh.shape["expert"] == 0):
+            return jax.tree.map(lambda _: P(None, "expert"), leaf)
         return jax.tree.map(lambda _: P(), leaf)
 
     return jax.tree.map(
         spec, tree,
-        is_leaf=lambda x: isinstance(x, ShardedKneadedWeight))
+        is_leaf=lambda x: isinstance(x, (KneadedWeight,
+                                         ShardedKneadedWeight)))
 
 
 def kneaded_shardings(tree: PyTree, mesh: Mesh,
@@ -299,7 +314,7 @@ def kneaded_shardings(tree: PyTree, mesh: Mesh,
     """NamedShardings matching :func:`kneaded_param_specs` — pass straight to
     ``jax.device_put`` to place a sharded kneaded checkpoint on the mesh."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s),
-                        kneaded_param_specs(tree, axis),
+                        kneaded_param_specs(tree, axis, mesh=mesh),
                         is_leaf=lambda x: isinstance(x, P))
 
 
